@@ -1,0 +1,23 @@
+"""Table 1: dataset profiling time (APCT construction) per graph."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core.apct import APCT
+from repro.graph import generators as gen
+
+
+def run(scale: str = "small"):
+    graphs = {
+        "er-3k": gen.erdos_renyi(3000, 8.0, seed=1),
+        "ws-8k": gen.small_world(8000, 8, 0.2, seed=2),
+        "rmat-8k": gen.rmat(13, 10.0, seed=3),
+        "tri-2k": gen.triangle_rich(2000, 60, seed=4),
+    }
+    for name, g in graphs.items():
+        apct = APCT(g, num_samples=32768)
+        emit(f"apct/profile/{name}", apct.profile_time_s * 1e6,
+             f"entries={len(apct.table)}")
+
+
+if __name__ == "__main__":
+    run()

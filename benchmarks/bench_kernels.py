@@ -1,0 +1,47 @@
+"""Kernel-level roofline deltas (supports §Perf): HBM traffic of the
+Pallas kernels vs the XLA lowering of the same computation, computed
+analytically from the BlockSpecs (the kernels execute in interpret mode
+here; on TPU the same BlockSpecs bound the traffic)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels import ops
+
+
+def _xla_triangle_bytes(n: int) -> int:
+    # A@A materialised (n*n f32 write + read) + two A reads + product read
+    return 4 * n * n * 4
+
+
+def _kernel_triangle_bytes(n: int, bm=128, bn=128, bk=128) -> int:
+    # per grid step: lhs tile + rhs tile + mask tile; product stays in VMEM
+    steps = (n // bm) * (n // bn) * (n // bk)
+    return steps * (bm * bk + bn * bk + bm * bn) * 4
+
+
+def run(scale: str = "small"):
+    from repro.graph.generators import erdos_renyi
+    for n in (512, 1024):
+        g = erdos_renyi(n, 12.0, seed=1)
+        adj = g.dense_adjacency(np.float32, pad=True)
+        npad = adj.shape[0]
+        dt, cnt = timeit(lambda: float(ops.triangle_count(adj,
+                                                          interpret=True)))
+        xb = _xla_triangle_bytes(npad)
+        kb = _kernel_triangle_bytes(npad)
+        emit(f"kernels/triangle/{n}", dt * 1e6,
+             f"hbm_xla={xb / 1e6:.1f}MB hbm_kernel={kb / 1e6:.1f}MB "
+             f"saving={xb / kb:.2f}x count={cnt:.0f}")
+    # flash attention traffic: score tensor never leaves VMEM
+    B, S, H, D, bq, bk = 1, 2048, 8, 128, 128, 128
+    xla_scores = B * H * (S // bq) * S * bq * 4 * 3     # s, p r/w per block
+    kern = B * H * S * D * 2 * 4                         # q,k,v,o tiles
+    emit("kernels/flashattn/2048", 0.0,
+         f"score_traffic_removed={xla_scores / 1e9:.2f}GB "
+         f"kernel_io={kern / 1e9:.3f}GB")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: timing, CSV emission, standard graphs."""
+from __future__ import annotations
+
+import time
+
+from repro.graph import generators as gen
+
+RESULTS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    line = f"{name},{us_per_call:.1f},{derived}"
+    RESULTS.append(line)
+    print(line, flush=True)
+
+
+def timeit(fn, *args, repeat: int = 1, warmup: bool = False, **kw):
+    if warmup:
+        fn(*args, **kw)                   # compile/warm caches
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return dt, out
+
+
+def bench_graphs(scale: str = "small"):
+    """Stand-ins for the paper's datasets (CPU container => synthetic):
+    citeseer-like (clustered, sparse), wiki-like (denser ER), patents-like
+    (larger, sparse).  'micro' (256 vertices) keeps width-3 contractions
+    cheap for the per-decomposition sweeps (cost model / search / PSB)."""
+    if scale == "micro":
+        return {
+            "cs-like": gen.triangle_rich(256, 12, seed=1),
+            "wk-like": gen.erdos_renyi(256, 10.0, seed=2),
+        }
+    if scale == "tiny":
+        return {
+            "cs-like": gen.triangle_rich(400, 16, seed=1),
+            "wk-like": gen.erdos_renyi(400, 10.0, seed=2),
+        }
+    return {
+        "cs-like": gen.triangle_rich(1200, 40, seed=1),
+        "wk-like": gen.erdos_renyi(1500, 14.0, seed=2),
+        "pt-like": gen.small_world(4000, 8, 0.2, seed=3),
+    }

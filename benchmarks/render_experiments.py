@@ -1,0 +1,264 @@
+"""Render EXPERIMENTS.md from cached results (dry-run grids, baseline
+snapshot, hillclimb logs, bench CSV).
+
+  PYTHONPATH=src python -m benchmarks.render_experiments
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+R = pathlib.Path(__file__).resolve().parent / "results"
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+HW = ("TPU v5e-class chip: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link "
+      "ICI (assignment constants)")
+
+
+def load_grid(mesh, base=False):
+    d = R / ("dryrun_baseline" if base else "dryrun") / mesh
+    recs = {}
+    if not d.exists():
+        return recs
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("tag"):
+            continue
+        if "skipped" in rec:
+            continue
+        recs[(rec["arch"], rec["shape"])] = rec
+    return recs
+
+
+def t(rec, k):
+    return f"{rec[k] * 1e3:,.1f}"
+
+
+def roofline_table(recs):
+    rows = ["| arch | shape | t_comp ms | t_mem ms | t_mem(kernel) ms | "
+            "t_coll ms | dominant | useful | HBM/dev GiB | frac |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for (a, s), r in sorted(recs.items()):
+        bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        boundk = max(r["t_compute"], r.get("t_memory_kernelized",
+                                           r["t_memory"]),
+                     r["t_collective"])
+        frac = r["t_compute"] / boundk if boundk else 0
+        rows.append(
+            f"| {a} | {s} | {t(r,'t_compute')} | {t(r,'t_memory')} | "
+            f"{r.get('t_memory_kernelized', r['t_memory'])*1e3:,.1f} | "
+            f"{t(r,'t_collective')} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.0%} | "
+            f"{r['memory']['peak_est_bytes']/2**30:.1f} | {frac:.1%} |")
+    return "\n".join(rows)
+
+
+def dryrun_section(single, multi):
+    lines = ["Every applicable (arch × shape) cell lowers AND compiles on "
+             "both production meshes — 16×16 = 256 chips single-pod and "
+             "2×16×16 = 512 chips multi-pod.  `long_500k` runs only for "
+             "sub-quadratic archs (jamba, mamba2) per the assignment; "
+             "decode shapes lower `decode_step`, prefill shapes "
+             "`prefill_step`, train shapes `train_step` (microbatched "
+             "AdamW).\n",
+             f"* single-pod cells compiled: **{len(single)}**",
+             f"* multi-pod cells compiled: **{len(multi)}**",
+             "",
+             "| arch | shape | mesh | HBM/dev GiB | #collectives | "
+             "compile s |", "|---|---|---|---|---|---|"]
+    for mesh_name, recs in (("single", single), ("multi", multi)):
+        for (a, s), r in sorted(recs.items()):
+            lines.append(
+                f"| {a} | {s} | {mesh_name} | "
+                f"{r['memory']['peak_est_bytes']/2**30:.1f} | "
+                f"{r['num_collectives']} | {r['compile_s']} |")
+    return "\n".join(lines)
+
+
+def perf_section():
+    out = []
+    for f in sorted(R.glob("hillclimb_*.json")):
+        h = json.loads(f.read_text())
+        out.append(f"#### autoshard search: {h['arch']} / {h['shape']} "
+                   f"({h['mesh']} pod)")
+        out.append("")
+        out.append("| step | assignment | bound (s) |")
+        out.append("|---|---|---|")
+        for i, (a, c) in enumerate(h["history"]):
+            short = {k: ("/".join(v) if isinstance(v, list) else v)
+                     for k, v in a.items()}
+            out.append(f"| {i} | `{short}` | {c:.2f} |")
+        out.append("")
+    return "\n".join(out)
+
+
+def main():
+    single = load_grid("single")
+    multi = load_grid("multi")
+    base_single = load_grid("single", base=True)
+
+    bench_csv = (R / "bench.csv").read_text() if (R / "bench.csv").exists() \
+        else "(run benchmarks first)"
+
+    doc = TEMPLATE.format(
+        hw=HW,
+        dryrun=dryrun_section(single, multi),
+        roof_single=roofline_table(single),
+        roof_multi=roofline_table(multi),
+        roof_baseline=roofline_table(base_single),
+        perf_searches=perf_section(),
+        n_single=len(single), n_multi=len(multi),
+    )
+    (ROOT / "EXPERIMENTS.md").write_text(doc)
+    print(f"wrote EXPERIMENTS.md ({len(single)} single + {len(multi)} "
+          f"multi cells)")
+
+
+TEMPLATE = """# EXPERIMENTS
+
+Hardware model: {hw}.  This container is CPU-only; kernels validate in
+Pallas interpret mode and all TPU numbers are derived from compiled HLO
+per the roofline method below.
+
+## §Dry-run
+
+{dryrun}
+
+## §Roofline
+
+Method: per-device FLOPs / HBM bytes / collective link traffic parsed
+from the optimized post-SPMD HLO with **trip-count-aware accounting**
+(XLA's `cost_analysis()` counts scan bodies once — `repro/distributed/
+hlo_parse.py` walks the call graph multiplying while-bodies by their trip
+counts; validated against `cost_analysis` on scan-free programs in
+`tests/test_hlo_parse.py`).  Collective traffic uses the ring model
+(all-reduce 2x(g-1)/g etc.).  Known approximations: (1) operand bytes are
+counted per consumer (double-reads are intentional), (2) XLA-CPU converts
+bf16 dots to f32, so some gathered weights appear at 4 B/elem that would
+be 2 B/elem on TPU — collective terms for those patterns are ~2x
+pessimistic, (3) `t_mem(kernel)` subtracts attention-score-shaped traffic
+(one axis == seq, one == flash block), i.e. the HBM round-trips
+`kernels/flashattn.py` keeps in VMEM; its own tile IO is O(q+k+v+o) < 2%
+of that.
+
+MODEL_FLOPS = 6·N_active·tokens (train, fwd+bwd) or 2·N_active·tokens
+(serve).  `useful` = MODEL_FLOPS / (HLO FLOPs × chips): train cells sit at
+45-75% because full rematerialisation re-runs the forward (8·N·D
+effective) plus attention/SSD mixing FLOPs — expected, not waste.
+`frac` = t_comp / max(t_comp, t_mem(kernel), t_coll) — the roofline
+fraction with the attention kernel modeled.
+
+### Optimized grid — single pod (16×16), {n_single} cells
+
+{roof_single}
+
+### Optimized grid — multi-pod (2×16×16), {n_multi} cells
+
+Multi-pod halves per-replica batch (DP over pod×data): compute and
+memory terms scale ~1/2 while cross-pod gradient reduction joins the
+collective term — exactly the regime gradient compression
+(`train/compression.py`, int8 + error feedback, 2x wire bytes vs bf16)
+targets.
+
+{roof_multi}
+
+### Paper-faithful baseline grid (pre-optimization snapshot)
+
+The baseline numbers below were measured on the same cells **before** the
+§Perf iterations (naive decode cache handling, einsum-dispatch MoE, no
+layout search) — kept verbatim as the reproduction baseline.  (Parser
+refinements for HBM-byte attribution landed between the snapshots, so
+collective and compute columns are like-for-like while memory columns are
+comparable only in order of magnitude; the §Perf log cites only
+same-parser measurements.)
+
+{roof_baseline}
+
+## §Perf — hypothesis → change → measure → validate
+
+The three hillclimbed cells (worst roofline fraction; most
+collective-bound; most representative): **command-r-35b/decode_32k**,
+**deepseek-v3-671b/train_4k**, **qwen3-4b/train_4k**.  The search engine
+is the paper's own circulant tuning (Fig 23) applied to sharding layouts
+(`repro/distributed/autoshard.py`) with the roofline bound as cost model —
+the DwarvesGraph technique reused as a first-class framework feature.
+
+### Iteration log (summary)
+
+| # | cell | hypothesis | change | before → after (bound) | verdict |
+|---|---|---|---|---|---|
+| 1 | command-r decode | TP/DP layout is wrong | circulant autoshard over (heads,kv,kv_seq,batch) | 1.72 s → 1.50 s | partially confirmed: layout helps 13%, but giant cache all-gathers persist — layout is not the root cause |
+| 2 | command-r decode | `vmap(dynamic_update_slice)` + KV->H expansion force GSPMD to all-gather the 43 GiB cache | masked-`where` cache update + grouped GQA decode (no expansion) | 1.50 s → 1.50 s | refuted: gathers persisted — they were loop-boundary reshards, not update artifacts |
+| 3 | command-r decode | the (KV=8, hd=128) cache split cannot express the 16-way sharding of the K/V projections, so the scan-carried cache is re-sharded (in f32!) every step | **flattened (B,S,KV·hd) cache layout** + f32-accumulate-in-bf16 einsums + pinned cache sharding | collective 1 719 → **58 ms**; memory 899 → 386 ms; HBM/dev 124 → 19 GiB | **confirmed** — 30× collective, 4.5× bound |
+| 4 | qwen3 train | 4 B params over 256 chips is over-tensor-parallel; per-layer Megatron all-reduces dominate | autoshard: batch over (data,model) = 256-way DP, embed FSDP, microbatches=1 | 12.85 s → **8.24 s** (coll 7.6 → 1.34 s) | confirmed; residual bound = attention-score HBM traffic |
+| 5 | qwen3 train | score traffic is removable only by a fused attention kernel | `kernels/flashattn.py` (measured via score-shaped-traffic subtraction) | t_mem 8.2 s → t_mem(kernel) — see table | confirmed by construction (kernel validated vs oracle; BlockSpec IO counted in bench_kernels) |
+| 6 | deepseek-v3 train | MoE einsum dispatch makes GSPMD all-reduce the full (B,E,C,d) buffer (28 GiB × 58 layers) | **shard_map expert parallelism with explicit all_to_all** | coll 225 s → 123 s | confirmed direction, but FSDP-gathered expert weights became the new bottleneck (6 × 380 GiB/step) |
+| 7 | deepseek-v3 train | token replication over the model axis makes EP compute redundant ×16 | shard the sequence dim over 'model' inside the MoE body | useful 5.8% → 49.7% | confirmed |
+| 8 | deepseek-v3 train | 256 experts divide the full 256-chip mesh — experts can live whole on one device each, eliminating ALL weight movement | full-mesh EP (experts over data×model), all_to_all over both axes | coll 123 s → **50 s** | confirmed (remaining collective = a2a token traffic + grad reduce; memory now dominates via attention scores -> kernel term) |
+| 9 | jamba/dbrx MoE (16 experts) | stationary 2-D-sharded expert weights + moving activations beats per-step weight gathers | expert-TP: co-locate the expert's tokens via all_gather over its data group, psum d-partials, slice own tokens back (first attempt psum'd *different* tokens' partials — caught by tests/test_moe_ep.py) | jamba decode coll 1 752 → **156 ms**, mem 848 → 247 ms; jamba TRAIN 122 → 161 s | confirmed for serving, **refuted for small-E training** (token traffic > weight traffic at 1M tokens/step) — EP is now gated: full-mesh EP always, expert-TP for <=65k-token steps, einsum dispatch otherwise |
+| 10 | all decode cells | the flattened-cache + grouped-GQA fixes generalise | applied fleet-wide | e.g. qwen3 decode coll 1 546 → 50 ms; llama-vision 1 390 → 45 ms; dbrx 2 314 → 693 ms; v3 decode HBM/dev 89 → 30 GiB (with latent `lora`->model sharding) | confirmed — see optimized vs baseline tables |
+| 11 | dbrx train (post-EP-gating) | the qwen finding (batch over data×model) transfers to MoE training | fresh autoshard round on final code | 61.2 s → **41.9 s** (batch=(pod,data,model), microbatches=1) | confirmed — further microbatch increases regress (weight re-gather scaling, as in change 6) |
+
+Stopping criterion: three further candidate changes (kv_seq/model decode
+sharding, batch-over-model decode, microbatch sweeps 2-16) each moved the
+dominant term < 5%.
+
+### Search traces
+
+{perf_searches}
+
+### Beyond-paper items implemented and measured
+
+* flattened KV-cache layout + pinned scan-carried shardings (change 3);
+* shard_map full-mesh expert parallelism (changes 6-8);
+* Pallas kernels: flashattn (score traffic), sddmm/matreduce (pattern-
+  counting contraction without materialising the product — triangle-count
+  HBM saving quantified in `bench_kernels`), bitset intersect;
+* autoshard — the paper's circulant tuning as the layout search engine;
+* gradient compression (int8 + error feedback) available for cross-pod
+  all-reduce: wire bytes 4x less than f32, validated in
+  `tests/test_train_substrate.py`.
+
+### Mining-side §Perf (the paper's own workload)
+
+Headline (Table 4 analogue, `counting/vs-loops/*` in bench.csv): the
+tensorised engine beats host nested-loop enumeration (the AutoMine-style
+baseline) by **~127x on 3-MC and ~406x on 4-MC**, with the gap growing in
+pattern size exactly as the paper reports.  Decomposed-vs-direct *within*
+the tensor engine is a further 0.95-1.42x (cut choice tunes contraction
+order; the engine's canonical-quotient memoisation already delivers the
+paper's cross-pattern reuse unconditionally — see the search-methods
+finding below).
+
+`benchmarks/bench_psb.py` reproduces Fig 28 (baseline / +DECOM /
++DECOM+PSB): decomposition helps most 5-vertex patterns; PSB helps when
+the oriented orbit contraction dominates and can hurt on tiny graphs
+(transpose-compensation overhead) — matching the paper's own observation
+that some patterns don't benefit (their p10) and motivating the 1% cost-
+model gate.  `bench_counting.py` shows the decomposed+reused engine vs
+direct per-pattern contraction (Tables 4/5 analogue);
+`bench_cost_model.py` reproduces Fig 22 (the APCT model correlates with
+runtime far better than the random-graph model).
+
+**Search-methods finding (Table 6 analogue, `bench_search.py`):** the
+cost-model ordering matches the paper (circulant <= separate <= random on
+*estimated* cost, pinned by `test_circulant_no_worse_than_separate`), but
+the measured *runtime* spread between methods is much smaller than the
+paper's — an architectural consequence of the tensorised adaptation:
+quotient hom contractions are memoised by canonical form, so the cutting
+set changes only the contraction *order*, never *what* gets computed.
+The paper's loop-compiled engine recomputes subpattern tables per choice,
+which is exactly why its joint search matters more.  Our engine gets the
+paper's cross-pattern reuse unconditionally; the search still pays off on
+large graphs where order determines intermediate widths (N^2 vs N^3).
+
+## Benchmark CSV
+
+See `benchmarks/results/bench.csv` (`name,us_per_call,derived`), one
+suite per paper table/figure; regenerate with
+`PYTHONPATH=src python -m benchmarks.run`.
+"""
+
+
+if __name__ == "__main__":
+    main()

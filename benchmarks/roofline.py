@@ -1,0 +1,59 @@
+"""§Roofline: render the (arch x shape) table from the cached dry-run
+JSONs (benchmarks/results/dryrun/<mesh>/).  Run the grids first:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load(mesh: str = "single", tag: str = "") -> list:
+    d = RESULTS / mesh
+    out = []
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("tag", "") != tag or "skipped" in rec:
+            continue
+        out.append(rec)
+    return out
+
+
+def as_markdown(recs: list) -> str:
+    head = ("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+            "dominant | useful FLOPs | HBM/dev (GiB) | roofline frac |\n"
+            "|---|---|---|---|---|---|---|---|---|")
+    rows = [head]
+    for r in recs:
+        bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        frac = r["t_compute"] / bound if bound else 0.0
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.2f} | "
+            f"{r['t_memory']*1e3:.2f} | {r['t_collective']*1e3:.2f} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.1%} | "
+            f"{r['memory']['peak_est_bytes']/2**30:.1f} | {frac:.1%} |")
+    return "\n".join(rows)
+
+
+def run(scale: str = "small"):
+    for mesh in ("single", "multi"):
+        recs = load(mesh)
+        if not recs:
+            print(f"(no cached dry-run results for mesh={mesh})")
+            continue
+        print(f"\n### Roofline — {mesh} pod ({len(recs)} cells)\n")
+        print(as_markdown(recs))
+        from benchmarks.common import emit
+        for r in recs:
+            bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+            emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                 bound * 1e6,
+                 f"dom={r['dominant']} frac={r['t_compute']/bound:.3f}")
+
+
+if __name__ == "__main__":
+    run()

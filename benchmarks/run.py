@@ -1,0 +1,66 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--scale tiny|small] [--only X]
+
+Emits ``name,us_per_call,derived`` CSV lines (also collected in
+benchmarks/results/bench.csv).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+import traceback
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import (bench_apct, bench_chains, bench_cost_model,
+                        bench_counting, bench_fsm, bench_kernels, bench_psb,
+                        bench_scaling, bench_search, roofline)
+from benchmarks.common import RESULTS
+
+SUITES = {
+    "counting": bench_counting.run,       # Tables 4/5
+    "cost_model": bench_cost_model.run,   # Fig 22
+    "search": bench_search.run,           # Table 6 / Fig 24
+    "psb": bench_psb.run,                 # Fig 28
+    "chains": bench_chains.run,           # Fig 29 / Table 7
+    "fsm": bench_fsm.run,                 # Fig 30
+    "apct": bench_apct.run,               # Table 1
+    "scaling": bench_scaling.run,         # Fig 31
+    "kernels": bench_kernels.run,         # §Perf kernel deltas
+    "roofline": roofline.run,             # §Roofline table
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="small", choices=["tiny", "small"])
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    failures = []
+    for name, fn in SUITES.items():
+        if args.only and name != args.only:
+            continue
+        print(f"=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn(args.scale)
+        except Exception:                  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+        print(f"=== {name} done in {time.time() - t0:.1f}s ===", flush=True)
+
+    out = pathlib.Path(__file__).parent / "results" / "bench.csv"
+    out.parent.mkdir(exist_ok=True)
+    out.write_text("\n".join(RESULTS) + "\n")
+    print(f"\nwrote {len(RESULTS)} rows to {out}")
+    if failures:
+        print(f"FAILED suites: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

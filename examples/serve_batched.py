@@ -1,0 +1,12 @@
+"""Batched serving with continuous batching (slot reuse, per-request
+prefill + shared decode steps).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main as serve_main
+
+serve_main(["--arch", "qwen3-4b", "--requests", "10", "--slots", "4",
+            "--max-new", "8"])

@@ -1,0 +1,30 @@
+"""End-to-end training: ~130M-parameter decoder on the synthetic pipeline
+with checkpoint/resume.  (Use --steps 200+ for a real run; the default is
+sized for a quick demonstration on one CPU.)
+
+    PYTHONPATH=src python examples/train_lm.py [--steps N]
+"""
+import sys
+sys.path.insert(0, "src")
+
+import argparse
+import tempfile
+
+from repro.launch.train import main as train_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=30)
+ap.add_argument("--full", action="store_true",
+                help="full repro-100m config (default: reduced width)")
+args = ap.parse_args()
+
+ckpt = tempfile.mkdtemp(prefix="repro100m_")
+argv = ["--arch", "repro-100m", "--steps", str(args.steps),
+        "--batch", "8", "--seq", "128", "--ckpt-dir", ckpt,
+        "--ckpt-every", "10", "--log-every", "5"]
+if not args.full:
+    argv.append("--reduced")
+
+losses = train_main(argv)
+print(f"\nloss: {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps")
+print(f"checkpoints in {ckpt} — rerun with the same dir to resume")

@@ -1,0 +1,113 @@
+"""Block-sparse adjacency counting: the scalable mining backend.
+
+Real graphs are sparse but locally dense; tiling the adjacency into
+TILE x TILE blocks and keeping only non-empty tiles gives the MXU dense
+work at the tile level while skipping the (vast) empty majority — the
+tensorised analogue of the paper's observation that enumeration cost
+follows pattern/graph structure, not n^k.
+
+``BlockSparseAdjacency`` stores the non-empty tiles of A; the counting
+kernels below (triangle / wedge-closing) iterate only over non-empty
+tile triples, and each tile-level product is exactly the Pallas
+``sddmm``/``matreduce`` computation (kernels/), so the same BlockSpecs
+apply on TPU.  Occupancy statistics quantify the skipped work.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.storage import Graph
+
+TILE = 128
+
+
+class BlockSparseAdjacency:
+    def __init__(self, g: Graph, tile: int = TILE):
+        self.tile = tile
+        self.n = g.n
+        self.nb = (g.n + tile - 1) // tile
+        blocks: dict = {}
+        for u, v in g.edges:
+            for (a, b) in ((u, v), (v, u)):
+                key = (int(a) // tile, int(b) // tile)
+                blocks.setdefault(key, []).append((int(a) % tile,
+                                                   int(b) % tile))
+        self.blocks = {}
+        for key, entries in blocks.items():
+            t = np.zeros((tile, tile), np.float32)
+            rr, cc = zip(*entries)
+            t[list(rr), list(cc)] = 1.0
+            self.blocks[key] = t
+        # row index: non-empty block columns per block row
+        self.row_blocks: dict = {}
+        for (i, j) in self.blocks:
+            self.row_blocks.setdefault(i, []).append(j)
+        for i in self.row_blocks:
+            self.row_blocks[i].sort()
+
+    @property
+    def occupancy(self) -> float:
+        return len(self.blocks) / float(self.nb * self.nb)
+
+    def stats(self) -> dict:
+        nnz = sum(int(t.sum()) for t in self.blocks.values())
+        return {"tiles": len(self.blocks), "grid": self.nb * self.nb,
+                "occupancy": self.occupancy, "nnz": nnz,
+                "tile_density": nnz / (len(self.blocks) * self.tile ** 2)}
+
+
+def triangle_count_blocksparse(bsa: BlockSparseAdjacency,
+                               use_kernel: bool = False) -> float:
+    """Σ A ⊙ (A @ A) / 6 over non-empty tile triples only.
+
+    For each non-empty output tile (i,j), accumulate A[i,k] @ A[k,j] over
+    k where BOTH factor tiles exist, then mask with A[i,j] and reduce —
+    per-tile this is exactly kernels/matreduce (use_kernel=True routes
+    through the Pallas op in interpret mode for validation).
+    """
+    total = 0.0
+    for (i, j), mask in bsa.blocks.items():
+        ks = [k for k in bsa.row_blocks.get(i, [])
+              if (k, j) in bsa.blocks]
+        if not ks:
+            continue
+        acc = np.zeros_like(mask)
+        for k in ks:
+            acc += bsa.blocks[(i, k)] @ bsa.blocks[(k, j)]
+        if use_kernel:
+            from repro.kernels import ops
+            import jax.numpy as jnp
+            # one fused tile op (stacked factors as a single K dim)
+            lhs = np.concatenate([bsa.blocks[(i, k)] for k in ks], axis=1)
+            rhs = np.concatenate([bsa.blocks[(k, j)].T for k in ks], axis=1)
+            total += float(ops.masked_matmul_reduce(
+                jnp.asarray(lhs), jnp.asarray(rhs), jnp.asarray(mask),
+                interpret=True))
+        else:
+            total += float((acc * mask).sum())
+    return total / 6.0
+
+
+def wedge_count_blocksparse(bsa: BlockSparseAdjacency) -> float:
+    """# 3-chains (edge-induced) = Σ_v deg(v)·(deg(v)-1)/2 computed from
+    tile row sums — validates the block structure end-to-end."""
+    deg = np.zeros(bsa.n)
+    for (i, j), t in bsa.blocks.items():
+        rows = t.sum(axis=1)
+        lo = i * bsa.tile
+        hi = min(lo + bsa.tile, bsa.n)
+        deg[lo:hi] += rows[:hi - lo]
+    return float((deg * (deg - 1) / 2).sum())
+
+
+def dense_flops(n: int) -> float:
+    return 2.0 * n ** 3
+
+
+def blocksparse_flops(bsa: BlockSparseAdjacency) -> float:
+    f = 0.0
+    t = bsa.tile
+    for (i, j) in bsa.blocks:
+        ks = [k for k in bsa.row_blocks.get(i, []) if (k, j) in bsa.blocks]
+        f += 2.0 * len(ks) * t ** 3
+    return f

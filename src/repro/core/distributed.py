@@ -1,0 +1,86 @@
+"""Distributed, fault-tolerant pattern counting.
+
+Scale-out story for the mining side (the paper is single-node/16-thread;
+we map it onto the production mesh):
+
+  * the dense adjacency is 2-D block-sharded over (data, model);
+  * every hom contraction is a sharded einsum under pjit — SUMMA-style
+    distributed matmuls with XLA-inserted collectives;
+  * the count is a sum over row-blocks of the first eliminated vertex:
+    each block is an independent work unit, so partial sums are
+    checkpointable (resume after preemption) and blocks are issued
+    block-cyclically (straggler mitigation: no device owns a contiguous
+    hot range of a skewed degree distribution).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import homomorphism as H
+from repro.core.pattern import Pattern
+from repro.core.quotient import quotient_terms
+
+
+def shard_adjacency(A_np: np.ndarray, mesh):
+    axes = [a for a in ("data", "model") if a in mesh.shape]
+    spec = P(*axes[:2]) if len(axes) >= 2 else P(axes[0] if axes else None)
+    return jax.device_put(jnp.asarray(A_np), NamedSharding(mesh, spec))
+
+
+def sharded_hom_count(p: Pattern, A, mesh, order=None,
+                      budget: int = 1 << 27) -> float:
+    """hom(p) with A sharded over the mesh; the contraction runs under jit
+    with replicated scalar output."""
+    fn = jax.jit(lambda a: H.hom_count(p, a, order=order, budget=budget),
+                 out_shardings=NamedSharding(mesh, P()))
+    return float(fn(A))
+
+
+def blockwise_hom_count(p: Pattern, A, mesh, num_blocks: int = 8,
+                        order=None, checkpoint: Optional[str] = None,
+                        budget: int = 1 << 27,
+                        fail_at_block: Optional[int] = None) -> float:
+    """hom(p) = Σ_b hom(p | x_{v0} ∈ block b): resumable accumulation.
+
+    ``checkpoint``: JSON path storing {block: partial}; completed blocks
+    are skipped on restart.  ``fail_at_block`` injects a failure for the
+    fault-tolerance tests.
+    """
+    n = A.shape[0]
+    order = order or H.greedy_plan(p)
+    v0 = order[-1]                       # eliminate last => outermost "loop"
+    done = {}
+    ckpt = pathlib.Path(checkpoint) if checkpoint else None
+    if ckpt and ckpt.exists():
+        done = {int(k): v for k, v in json.loads(ckpt.read_text()).items()}
+
+    for b in range(num_blocks):
+        if b in done:
+            continue
+        if fail_at_block is not None and b == fail_at_block:
+            raise RuntimeError(f"injected failure at block {b}")
+        mask = np.zeros(n, np.float64)
+        sel = np.arange(b, n, num_blocks)        # block-cyclic rows
+        mask[sel] = 1.0
+        fn = jax.jit(lambda a, m: H.hom_count(
+            p, a, order=order, unary={v0: m}, budget=budget),
+            out_shardings=NamedSharding(mesh, P()) if mesh else None)
+        val = float(fn(A, jnp.asarray(mask, A.dtype)))
+        done[b] = val
+        if ckpt:
+            ckpt.write_text(json.dumps(done))
+    return sum(done.values())
+
+
+def sharded_inj(p: Pattern, A, mesh, budget: int = 1 << 27) -> float:
+    total = 0.0
+    for coeff, q in quotient_terms(p):
+        total += coeff * sharded_hom_count(q, A, mesh, budget=budget)
+    return total

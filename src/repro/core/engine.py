@@ -1,0 +1,238 @@
+"""MiningEngine: the partial-embedding-centric programming model (paper §3).
+
+Guarantees (paper):
+  * Completeness — if one partial embedding of a subpattern is processed,
+    all partial embeddings of that subpattern are processed;
+  * Coverage — the processed subpatterns jointly cover every pattern vertex.
+
+Both hold by construction: the engine decomposes the pattern with a
+cutting set, and processes *every* partial embedding of *every* subpattern
+(whose union covers V_p since each subpattern contains V_C plus one
+component).
+
+Fast paths (pattern counting, existence, FSM domains) are pure tensor
+contractions.  The generic UDF path follows Algorithm 1 literally —
+enumerate cut tuples e_c, per-subpattern extension counts M_i, shrinkage
+hash tables — and is exact on any graph the host enumeration can afford;
+it exists to give UDFs the same semantics the paper defines.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import cost_model as CM
+from repro.core.apct import APCT
+from repro.core.counting import CountingEngine
+from repro.core.decomposition import candidates, cutting_sets, subpatterns
+from repro.core.pattern import Pattern
+from repro.core.quotient import shrinkage_patterns
+from repro.graph.storage import Graph
+
+UNDETERMINED = -1
+
+
+@dataclass(frozen=True)
+class PartialEmbedding:
+    subpattern_id: int
+    vertices: tuple                   # per pattern vertex: graph id or -1
+
+    def get_vertex(self, i: int) -> int:
+        return self.vertices[i]
+
+    @property
+    def determined(self):
+        return [(i, v) for i, v in enumerate(self.vertices)
+                if v != UNDETERMINED]
+
+
+class MiningEngine:
+    def __init__(self, graph: Graph, apct: Optional[APCT] = None,
+                 budget: int = 1 << 27):
+        self.graph = graph
+        self.counter = CountingEngine(graph, budget=budget)
+        self.apct = apct or APCT(graph)
+
+    # -- decomposition choice -------------------------------------------------
+    def choose_cut(self, p: Pattern):
+        """Cost-model-optimal cutting set (None = direct fallback, the
+        paper's degeneration guard)."""
+        best, bc = None, math.inf
+        for cand in candidates(p):
+            c = CM.pattern_cost(p, cand, self.apct, self.graph.n)
+            if c < bc:
+                best, bc = cand, c
+        return best
+
+    # -- fast paths -------------------------------------------------------------
+    def get_pattern_count(self, p: Pattern, induced: str = "edge",
+                          cut="auto") -> float:
+        if cut == "auto":
+            cut = self.choose_cut(p)
+        if induced == "edge":
+            return self.counter.edge_induced(p, cut=cut)
+        return self.counter.vertex_induced(p)
+
+    def pattern_exists(self, p: Pattern) -> bool:
+        return self.counter.existence(p)
+
+    # -- Algorithm 1 (generic UDF path) -------------------------------------------
+    def run_partial_embeddings(self, p: Pattern,
+                               udf: Callable[[PartialEmbedding, int], None],
+                               cut="auto"):
+        """Enumerate all partial embeddings of every subpattern with their
+        extension counts and pass them to the UDF (Algorithm 1)."""
+        if cut == "auto":
+            cut = self.choose_cut(p)
+        if not cut:
+            cs = cutting_sets(p)
+            cut = cs[0] if cs else None
+        if cut is None:
+            # clique-like: the whole pattern is the single "subpattern"
+            for emb in self._enumerate(p):
+                udf(PartialEmbedding(0, emb), 1)
+            return
+        subs = subpatterns(p, cut)                      # [(pattern, map)]
+        cut_list = sorted(cut)
+
+        # shrinkage hash tables: num_shrinkages_i[pe]
+        shrinks = [dict() for _ in subs]
+        for q, sigma_map in self._shrinkage_with_maps(p, cut):
+            for emb in self._enumerate(q):
+                # emb maps q's vertices to graph ids; pull back to p
+                pv = [emb[sigma_map[v]] for v in range(p.n)]
+                for i, (sub, vmap) in enumerate(subs):
+                    key = tuple(pv[v] for v in sorted(vmap))
+                    shrinks[i][key] = shrinks[i].get(key, 0) + 1
+
+        # per-subpattern embedding lists grouped by cut tuple
+        sub_embs = []
+        for i, (sub, vmap) in enumerate(subs):
+            groups: dict = {}
+            new_cut = tuple(vmap[c] for c in cut_list)
+            for emb in self._enumerate(sub):
+                key = tuple(emb[c] for c in new_cut)
+                groups.setdefault(key, []).append(emb)
+            sub_embs.append(groups)
+
+        all_keys = set().union(*[set(g) for g in sub_embs]) \
+            if sub_embs else set()
+        for e_c in sorted(all_keys):
+            Ms = [len(g.get(e_c, ())) for g in sub_embs]
+            M = math.prod(Ms)
+            if M == 0:
+                continue
+            for i, (sub, vmap) in enumerate(subs):
+                inv = {nv: ov for ov, nv in vmap.items()}
+                for emb in sub_embs[i].get(e_c, ()):
+                    full = [UNDETERMINED] * p.n
+                    for nv, gid in enumerate(emb):
+                        full[inv[nv]] = gid
+                    key = tuple(full[v] for v in sorted(vmap))
+                    cnt = M // Ms[i] - shrinks[i].get(key, 0)
+                    if cnt > 0:
+                        udf(PartialEmbedding(i, tuple(full)), cnt)
+
+    def materialize(self, p: Pattern, pe: PartialEmbedding,
+                    num: int) -> list:
+        """Extend a partial embedding to at most ``num`` whole-pattern
+        embeddings (vertex-set-based extension, Fig 5)."""
+        out = []
+        fixed = {i: v for i, v in pe.determined}
+        todo = [i for i in range(p.n) if i not in fixed]
+        g = self.graph
+
+        def rec(assign):
+            if len(out) >= num:
+                return
+            if len(assign) == p.n:
+                out.append(tuple(assign[i] for i in range(p.n)))
+                return
+            v = todo[len(assign) - len(fixed)]
+            back = [u for u in range(p.n) if p.has_edge(u, v) and u in assign]
+            cands = (set(g.neighbors(assign[back[0]]))
+                     if back else set(range(g.n)))
+            for u in back[1:]:
+                cands &= set(g.neighbors(assign[u]))
+            for x in sorted(cands):
+                if x in assign.values():
+                    continue
+                if g.labels is not None and p.labels is not None and \
+                        g.labels[x] != p.labels[v]:
+                    continue
+                assign[v] = x
+                rec(assign)
+                del assign[v]
+                if len(out) >= num:
+                    return
+
+        rec(dict(fixed))
+        return out
+
+    # -- helpers -----------------------------------------------------------------
+    def _enumerate(self, p: Pattern) -> list:
+        """All injective embedding tuples of p (host, small patterns)."""
+        from repro.core.counting import _connected_order
+        g = self.graph
+        order = _connected_order(p)
+        pos = {v: i for i, v in enumerate(order)}
+        out = []
+        assign = [UNDETERMINED] * p.n
+
+        def rec(i):
+            if i == p.n:
+                out.append(tuple(assign))
+                return
+            v = order[i]
+            back = [u for u in range(p.n)
+                    if p.has_edge(u, v) and pos[u] < i]
+            if back:
+                cands = set(g.neighbors(assign[back[0]]))
+                for u in back[1:]:
+                    cands &= set(g.neighbors(assign[u]))
+            else:
+                cands = range(g.n)
+            for x in cands:
+                if x in assign[:0] or x in [assign[order[j]]
+                                            for j in range(i)]:
+                    continue
+                if g.labels is not None and p.labels is not None and \
+                        g.labels[x] != p.labels[v]:
+                    continue
+                # edge-induced: all pattern edges to earlier vertices hold
+                assign[v] = x
+                rec(i + 1)
+                assign[v] = UNDETERMINED
+
+        rec(0)
+        return out
+
+    def _shrinkage_with_maps(self, p: Pattern, cut) -> list:
+        """[(quotient pattern, map p-vertex -> quotient vertex)] for every
+        cross-component merging partition (not deduped — Algorithm 1 needs
+        every tuple)."""
+        from repro.core.quotient import partitions
+        comps = p.components_without(cut)
+        comp_of = {}
+        for ci, comp in enumerate(comps):
+            for v in comp:
+                comp_of[v] = ci
+        non_cut = tuple(v for v in range(p.n) if v not in cut)
+        out = []
+        for sigma in partitions(non_cut):
+            nontrivial = [b for b in sigma if len(b) > 1]
+            if not nontrivial:
+                continue
+            if not all(len({comp_of[v] for v in b}) == len(b)
+                       for b in sigma):
+                continue
+            full = [[v] for v in sorted(cut)] + [sorted(b) for b in sigma]
+            q, blk = p.quotient_with_map(full)
+            if q is None:
+                continue
+            out.append((q, blk))
+        return out

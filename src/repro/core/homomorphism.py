@@ -1,0 +1,171 @@
+"""Homomorphism-count engine: bucket elimination over the dense adjacency.
+
+``hom_count`` contracts one tensor factor A[x_u, x_v] per pattern edge
+(plus optional unary label/orientation factors) following an explicit
+vertex elimination order — the tensorised form of the paper's loop nests.
+Choosing the order IS choosing the decomposition: a cutting set is a
+separator that the order eliminates last.
+
+Intermediates above the element budget are computed in chunks over their
+leading index (lax-free host loop of device einsums) — the dense analogue
+of tiling the enumeration over vertex blocks, which is also what the
+distributed path shards.
+"""
+from __future__ import annotations
+
+import string
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pattern import Pattern
+
+LETTERS = string.ascii_letters
+
+
+class PlanTooWide(Exception):
+    """The elimination order materialises an intermediate beyond the hard
+    memory cap — the tensorised analogue of an enumeration too wide to
+    tile.  Callers fall back (cliques -> ordered enumeration) or re-plan."""
+
+
+def plan_from_cut(p: Pattern, cut: frozenset) -> tuple:
+    """Elimination order from a cutting set: component vertices first
+    (per component, leaves inward), cut vertices last."""
+    comps = p.components_without(cut)
+    order = []
+    for comp in sorted(comps, key=lambda c: (len(c), sorted(c))):
+        order.extend(sorted(comp))
+    order.extend(sorted(cut))
+    return tuple(order)
+
+
+def greedy_plan(p: Pattern, free: tuple = ()) -> tuple:
+    """Min-degree-style greedy elimination order (baseline plan)."""
+    adj = {v: set(ns) for v, ns in enumerate(p.adj())}
+    remaining = set(range(p.n)) - set(free)
+    order = []
+    while remaining:
+        v = min(remaining, key=lambda x: (len(adj[x] & remaining), x))
+        order.append(v)
+        nb = adj[v] & (remaining - {v})
+        for a in nb:                       # connect the frontier (fill-in)
+            adj[a] |= nb - {a}
+        remaining.remove(v)
+    order.extend(sorted(free))
+    return tuple(order)
+
+
+def frontier_sizes(p: Pattern, order: tuple, free: tuple = ()) -> list:
+    """Width of each elimination step (ndim of the intermediate), and the
+    processed-subpattern vertex sets (for the APCT cost model)."""
+    adj = {v: set(ns) for v, ns in enumerate(p.adj())}
+    alive = {v: set(adj[v]) for v in range(p.n)}
+    steps = []
+    eliminated = set()
+    for v in order:
+        if v in free:
+            continue
+        frontier = alive[v] - eliminated
+        steps.append((v, frozenset(frontier | {v})))
+        for a in frontier:
+            alive[a] |= frontier - {a}
+        eliminated.add(v)
+    return steps
+
+
+def _einsum_letters(idx_sets, out_idx):
+    names = {}
+    for s in idx_sets:
+        for i in s:
+            if i not in names:
+                names[i] = LETTERS[len(names)]
+    for i in out_idx:
+        if i not in names:
+            names[i] = LETTERS[len(names)]
+    lhs = ",".join("".join(names[i] for i in s) for s in idx_sets)
+    rhs = "".join(names[i] for i in out_idx)
+    return lhs + "->" + rhs
+
+
+def _contract(tensors, out_idx, budget: int):
+    """einsum the (indices, array) factors down to ``out_idx``; chunk over
+    the leading output index if the result exceeds the budget."""
+    idx_sets = [t[0] for t in tensors]
+    arrays = [t[1] for t in tensors]
+    n = arrays[0].shape[0] if arrays else 1
+    out_elems = n ** len(out_idx)
+    if out_elems > 4 * budget:
+        raise PlanTooWide(f"intermediate of {out_elems:.2e} elements "
+                          f"(indices {out_idx}, n={n}) exceeds the cap")
+    if out_elems <= budget or not out_idx:
+        return jnp.einsum(_einsum_letters(idx_sets, out_idx), *arrays)
+    # chunk over out_idx[0]
+    lead = out_idx[0]
+    chunk = max(1, budget // max(n ** (len(out_idx) - 1), 1))
+    pieces = []
+    for start in range(0, n, chunk):
+        sl = slice(start, min(start + chunk, n))
+        sub = []
+        for s, a in tensors:
+            if lead in s:
+                axis = s.index(lead)
+                a = jax.lax.slice_in_dim(a, sl.start, sl.stop, axis=axis)
+            sub.append((s, a))
+        pieces.append(jnp.einsum(
+            _einsum_letters([t[0] for t in sub], out_idx),
+            *[t[1] for t in sub]))
+    return jnp.concatenate(pieces, axis=0)
+
+
+def hom_count(p: Pattern, A, *, order: Optional[tuple] = None,
+              free: tuple = (), unary: Optional[dict] = None,
+              edge_tensors: Optional[dict] = None,
+              budget: int = 1 << 27):
+    """# homomorphisms (maps preserving edges) of p into the graph with
+    dense adjacency A, with ``free`` pattern vertices kept as output axes.
+
+    unary: {vertex: (N,) factor}    (labels, degree masks, ...)
+    edge_tensors: {(u,v) sorted: (N,N) factor} overriding A for that edge
+      (orientation masks for partial symmetry breaking).
+    """
+    n = A.shape[0]
+    if p.n == 1:
+        vec = unary.get(0, jnp.ones((n,), A.dtype)) if unary else \
+            jnp.ones((n,), A.dtype)
+        return vec if free == (0,) else jnp.sum(vec)
+    factors = []
+    for (u, v) in sorted(p.edges):
+        t = None
+        if edge_tensors:
+            t = edge_tensors.get((u, v))
+        factors.append(((u, v), t if t is not None else A))
+    if unary:
+        for v, vec in unary.items():
+            factors.append(((v,), vec))
+    covered = set()
+    for s, _ in factors:
+        covered.update(s)
+    for v in range(p.n):                      # isolated vertices
+        if v not in covered:
+            factors.append(((v,), jnp.ones((n,), A.dtype)))
+
+    order = order or greedy_plan(p, free)
+    for v in order:
+        if v in free:
+            continue
+        involved = [f for f in factors if v in f[0]]
+        rest = [f for f in factors if v not in f[0]]
+        out_idx = tuple(sorted({i for s, _ in involved for i in s} - {v}))
+        arr = _contract(involved, out_idx, budget)
+        factors = rest + [(out_idx, arr)]
+    # multiply remaining factors over free indices
+    if not free:
+        total = jnp.asarray(1.0, A.dtype)
+        for s, a in factors:
+            total = total * (a if a.ndim == 0 else jnp.sum(a))
+        return total
+    arr = _contract(factors, tuple(free), budget)
+    return arr

@@ -1,0 +1,104 @@
+"""Partition lattice machinery: set partitions, Möbius coefficients, and
+shrinkage (quotient) patterns.
+
+The paper's shrinkage patterns (§2.4) are quotients of the target pattern
+obtained by merging vertices from *different* subpatterns.  In full
+generality, homomorphism and injective-tuple counts are related across the
+partition lattice:
+
+    hom(p, G)  =  Σ_{σ ∈ Π(V_p)}  inj(p/σ, G)
+    inj(p, G)  =  Σ_{σ ∈ Π(V_p)}  μ(σ) · hom(p/σ, G),
+    μ(σ)       =  Π_{B ∈ σ} (-1)^{|B|-1} (|B|-1)!
+
+Quotients with self-loops (merging adjacent vertices) have zero counts on
+simple graphs and are dropped.  Quotients are deduplicated by canonical
+form, which is exactly the paper's cross-pattern computation reuse: all
+112 6-motif patterns share a small pool of quotient hom computations.
+"""
+from __future__ import annotations
+
+import math
+from functools import lru_cache
+
+from repro.core.pattern import Pattern
+
+
+def partitions(items: tuple):
+    """All set partitions of ``items`` (tuple of ints)."""
+    items = list(items)
+    if not items:
+        yield []
+        return
+    first, rest = items[0], items[1:]
+    for part in partitions(tuple(rest)):
+        for i in range(len(part)):
+            yield part[:i] + [part[i] + [first]] + part[i + 1:]
+        yield [[first]] + part
+
+
+def mobius(partition) -> int:
+    mu = 1
+    for block in partition:
+        b = len(block)
+        mu *= (-1) ** (b - 1) * math.factorial(b - 1)
+    return mu
+
+
+@lru_cache(maxsize=10_000)
+def quotient_terms(p: Pattern) -> tuple:
+    """Terms of inj(p) = Σ μ·hom(p/σ): tuple of (coeff, canonical quotient),
+    merged by isomorphism class.  Self-loop quotients are dropped."""
+    acc = {}
+    for sigma in partitions(tuple(range(p.n))):
+        q = p.quotient(sigma)
+        if q is None:
+            continue
+        c = q.canonical()
+        acc[c] = acc.get(c, 0) + mobius(sigma)
+    return tuple(sorted(((v, k) for k, v in acc.items() if v != 0),
+                        key=lambda t: (t[1].n, t[1].m, sorted(t[1].edges))))
+
+
+@lru_cache(maxsize=10_000)
+def hom_expansion(p: Pattern) -> tuple:
+    """Terms of hom(p) = Σ inj(p/σ): tuple of (count, canonical quotient)."""
+    acc = {}
+    for sigma in partitions(tuple(range(p.n))):
+        q = p.quotient(sigma)
+        if q is None:
+            continue
+        c = q.canonical()
+        acc[c] = acc.get(c, 0) + 1
+    return tuple(sorted(((v, k) for k, v in acc.items()),
+                        key=lambda t: (t[1].n, t[1].m, sorted(t[1].edges))))
+
+
+def shrinkage_patterns(p: Pattern, cut: frozenset) -> list:
+    """The paper's shrinkage patterns for a decomposition with cutting set
+    ``cut``: quotients merging >=2 vertices that lie in *different*
+    connected components of p - cut (cut vertices are never merged).
+    Returns a list of (canonical quotient, multiplicity) pairs where the
+    multiplicity counts the partitions producing that quotient."""
+    comps = p.components_without(cut)
+    comp_of = {}
+    for ci, comp in enumerate(comps):
+        for v in comp:
+            comp_of[v] = ci
+    non_cut = tuple(v for v in range(p.n) if v not in cut)
+    acc = {}
+    for sigma in partitions(non_cut):
+        # must merge at least one cross-component pair; blocks within one
+        # component are not shrinkages (they are impossible tuples already
+        # excluded by per-subpattern injectivity)
+        nontrivial = [b for b in sigma if len(b) > 1]
+        if not nontrivial:
+            continue
+        if not all(len({comp_of[v] for v in b}) == len(b) for b in sigma):
+            continue                        # merged within one component
+        full = [[v] for v in cut] + [list(b) for b in sigma]
+        q = p.quotient(full)
+        if q is None:
+            continue
+        c = q.canonical()
+        acc[c] = acc.get(c, 0) + 1
+    return sorted(acc.items(), key=lambda t: (t[0].n, t[0].m))

@@ -1,0 +1,168 @@
+"""Joint decomposition-space search (paper §4.3, Fig 23).
+
+For an application with n concrete patterns, each with m candidate cutting
+sets, the joint space is m^n (cross-pattern reuse couples the choices).
+Circulant tuning iterates over patterns round-robin, re-picking each
+pattern's cutting set greedily against the *current* assignment of all
+others, until a full pass changes nothing — a coordinate-descent local
+optimum.  Baselines: independent/separate tuning, random sampling, and
+simulated annealing (the paper's comparison set).
+"""
+from __future__ import annotations
+
+import math
+import random
+import time
+from dataclasses import dataclass, field
+
+from repro.core import cost_model as CM
+from repro.core.decomposition import candidates
+from repro.core.pattern import Pattern
+
+
+@dataclass
+class SearchResult:
+    cuts: list                       # chosen cutting set per pattern
+    cost: float
+    search_time_s: float
+    evals: int = 0
+    history: list = field(default_factory=list)   # (time, best_cost)
+
+
+def _cost(patterns, cuts, apct, n) -> float:
+    return CM.application_cost(list(zip(patterns, cuts)), apct, n)
+
+
+def separate_tuning(patterns, apct, n) -> SearchResult:
+    """Tune each pattern independently (no reuse awareness)."""
+    t0 = time.time()
+    cuts, evals = [], 0
+    for p in patterns:
+        best, bc = None, math.inf
+        for cand in candidates(p):
+            c = CM.pattern_cost(p, cand, apct, n)
+            evals += 1
+            if c < bc:
+                best, bc = cand, c
+        cuts.append(best)
+    return SearchResult(cuts, _cost(patterns, cuts, apct, n),
+                        time.time() - t0, evals)
+
+
+def independent_sampling(patterns, apct, n, num_samples: int = 64,
+                         seed: int = 0) -> SearchResult:
+    t0 = time.time()
+    rng = random.Random(seed)
+    cands = [candidates(p) for p in patterns]
+    best, bc = None, math.inf
+    hist = []
+    for _ in range(num_samples):
+        cuts = [rng.choice(cs) for cs in cands]
+        c = _cost(patterns, cuts, apct, n)
+        if c < bc:
+            best, bc = cuts, c
+        hist.append((time.time() - t0, bc))
+    return SearchResult(best, bc, time.time() - t0, num_samples, hist)
+
+
+def circulant_tuning(patterns, apct, n, init=None,
+                     max_rounds: int = 20) -> SearchResult:
+    """Algorithm of Fig 23: round-robin coordinate descent over the joint
+    cutting-set assignment until convergence."""
+    t0 = time.time()
+    cands = [candidates(p) for p in patterns]
+    cuts = (list(init) if init is not None
+            else separate_tuning(patterns, apct, n).cuts)
+    best = _cost(patterns, cuts, apct, n)
+    evals = 0
+    hist = [(time.time() - t0, best)]
+    for _ in range(max_rounds):
+        converged = True
+        for i, p in enumerate(patterns):
+            previous = cuts[i]
+            for cand in cands[i]:
+                if cand == cuts[i]:
+                    continue
+                backup = cuts[i]
+                cuts[i] = cand
+                c = _cost(patterns, cuts, apct, n)
+                evals += 1
+                if c < best:
+                    best = c
+                    hist.append((time.time() - t0, best))
+                else:
+                    cuts[i] = backup
+            if cuts[i] != previous:
+                converged = False
+        if converged:
+            break
+    return SearchResult(cuts, best, time.time() - t0, evals, hist)
+
+
+def simulated_annealing(patterns, apct, n, steps: int = 300,
+                        t_start: float = 2.0, seed: int = 0) -> SearchResult:
+    t0 = time.time()
+    rng = random.Random(seed)
+    cands = [candidates(p) for p in patterns]
+    cuts = [rng.choice(cs) for cs in cands]
+    cur = _cost(patterns, cuts, apct, n)
+    best, bcuts = cur, list(cuts)
+    hist = [(time.time() - t0, best)]
+    for s in range(steps):
+        temp = t_start * (1 - s / steps) + 1e-3
+        i = rng.randrange(len(patterns))
+        old = cuts[i]
+        cuts[i] = rng.choice(cands[i])
+        c = _cost(patterns, cuts, apct, n)
+        if c < cur or rng.random() < math.exp(min((cur - c) / (abs(cur) * temp
+                                                              + 1e-9), 0)):
+            cur = c
+            if c < best:
+                best, bcuts = c, list(cuts)
+                hist.append((time.time() - t0, best))
+        else:
+            cuts[i] = old
+    return SearchResult(bcuts, best, time.time() - t0, steps, hist)
+
+
+def genetic(patterns, apct, n, pop: int = 16, gens: int = 12,
+            seed: int = 0) -> SearchResult:
+    """Genetic baseline (paper §4.3): uniform crossover + point mutation
+    over the joint cutting-set assignment."""
+    t0 = time.time()
+    rng = random.Random(seed)
+    cands = [candidates(p) for p in patterns]
+
+    def rand_ind():
+        return [rng.choice(cs) for cs in cands]
+
+    popl = [rand_ind() for _ in range(pop)]
+    scored = [( _cost(patterns, ind, apct, n), ind) for ind in popl]
+    evals = pop
+    hist = [(time.time() - t0, min(s for s, _ in scored))]
+    for g in range(gens):
+        scored.sort(key=lambda t: t[0])
+        elite = [ind for _, ind in scored[:pop // 4]]
+        children = list(elite)
+        while len(children) < pop:
+            a, b = rng.sample(elite, 2) if len(elite) >= 2 else (elite[0],
+                                                                 elite[0])
+            child = [x if rng.random() < 0.5 else y for x, y in zip(a, b)]
+            if rng.random() < 0.5:
+                i = rng.randrange(len(child))
+                child[i] = rng.choice(cands[i])
+            children.append(child)
+        scored = [(_cost(patterns, ind, apct, n), ind) for ind in children]
+        evals += len(children)
+        hist.append((time.time() - t0, min(s for s, _ in scored)))
+    best, ind = min(scored, key=lambda t: t[0])
+    return SearchResult(ind, best, time.time() - t0, evals, hist)
+
+
+METHODS = {
+    "separate": separate_tuning,
+    "random": independent_sampling,
+    "circulant": circulant_tuning,
+    "annealing": simulated_annealing,
+    "genetic": genetic,
+}

@@ -1,0 +1,407 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's HloCostAnalysis (exposed via ``compiled.cost_analysis()``) counts a
+``while`` body ONCE, so any scan-over-layers program under-reports FLOPs,
+bytes, and collective traffic by ~num_layers x.  This module parses the
+optimized (post-SPMD, per-device) HLO text, builds the computation call
+graph, infers scan trip counts from the loop-condition constants, and
+accumulates:
+
+  * dot FLOPs (2 * prod(result dims) * prod(contracting dims)) plus 1 FLOP
+    per output element of arithmetic elementwise ops,
+  * HBM traffic: result + operand bytes of every materialising top-level
+    instruction (fusion internals excluded — they live in registers/VMEM),
+  * collective link traffic via the ring model (see hlo_analysis).
+
+Approximations are conservative and documented in EXPERIMENTS.md §Roofline.
+The parser is validated against cost_analysis() on scan-free programs in
+tests/test_hlo_parse.py.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INST_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(?P<name>%[\w.\-]+)\s*=\s*"
+    r"(?P<type>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>[\w\-]+)\((?P<args>.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(?P<name>%[\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "tanh", "log", "rsqrt", "sqrt", "negate", "abs",
+    "logistic", "cosine", "sine", "floor", "ceil", "round-nearest-afz",
+    "select", "compare", "and", "or", "xor", "not", "clamp",
+    "exponential-minus-one", "log-plus-one", "atan2", "sign",
+}
+SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+    "copy-start", "copy-done",
+}
+COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "reduce-scatter-start", "all-to-all-start", "collective-permute-start",
+}
+CALLEE_ATTRS = ("calls", "to_apply", "body", "condition",
+                "true_computation", "false_computation", "update_computation",
+                "select", "scatter", "branch_computations", "called_computations")
+
+
+def _parse_shapes(type_str):
+    """-> list of (dtype, dims list)."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",") if x.strip()]
+        out.append((dt, d))
+    return out
+
+
+def _bytes_of(type_str):
+    return sum(_DTYPE_BYTES[dt] * math.prod(d) for dt, d in _parse_shapes(type_str))
+
+
+def _elems_of(type_str):
+    return sum(math.prod(d) for _, d in _parse_shapes(type_str))
+
+
+@dataclass
+class Inst:
+    name: str
+    op: str
+    type_str: str
+    operands: list
+    attrs_str: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    insts: list = field(default_factory=list)
+    by_name: dict = field(default_factory=dict)
+
+
+def parse_module(text: str) -> dict:
+    comps = {}
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and "{" in line:
+                cur = Computation(m.group("name"))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INST_RE.match(line)
+        if not m:
+            continue
+        args = m.group("args")
+        # split operand region (up to matching paren) from attrs
+        depth, i = 1, 0
+        while i < len(args) and depth:
+            if args[i] == "(":
+                depth += 1
+            elif args[i] == ")":
+                depth -= 1
+            i += 1
+        operand_str, attr_str = args[:i - 1], args[i:]
+        inst = Inst(m.group("name"), m.group("op"), m.group("type"),
+                    _OPERAND_RE.findall(operand_str), attr_str, line)
+        cur.insts.append(inst)
+        cur.by_name[inst.name] = inst
+    return comps
+
+
+def _callees(inst: Inst, kind: str):
+    """Computation names referenced by attrs.  kind selects which edges."""
+    out = []
+    for attr in CALLEE_ATTRS:
+        for m in re.finditer(attr + r"=\{?([%\w.\-, ]+)\}?", inst.attrs_str):
+            out.extend(_OPERAND_RE.findall(m.group(1)))
+    return out
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition — jax scans compare
+    the induction variable against the trip count."""
+    best = 1
+    for inst in cond.insts:
+        for m in _CONST_RE.finditer(inst.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(inst: Inst, comp: Computation) -> float:
+    res = _elems_of(inst.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.attrs_str)
+    cdims = [int(x) for x in m.group(1).split(",") if x.strip()] if m else []
+    # lhs operand dims from symbol table
+    contr = 1
+    if inst.operands:
+        lhs = comp.by_name.get(inst.operands[0])
+        if lhs is not None:
+            shapes = _parse_shapes(lhs.type_str)
+            if shapes:
+                dims = shapes[0][1]
+                for c in cdims:
+                    if c < len(dims):
+                        contr *= dims[c]
+    return 2.0 * res * max(contr, 1)
+
+
+def _fusion_bytes(inst: Inst, comp: Computation, comps: dict) -> float:
+    """HBM bytes touched by a fusion call.
+
+    Operands that are only dynamic-sliced/gathered inside the body count as
+    the slice size, not the full buffer (scan-carried stacks would otherwise
+    inflate traffic by the trip count).  A root dynamic-update-slice writes
+    in place, so it counts as the update size.
+    """
+    m = re.search(r"calls=([%\w.\-]+)", inst.attrs_str)
+    body = comps.get(m.group(1)) if m else None
+    if body is None:
+        ob = sum(_bytes_of(comp.by_name[o].type_str)
+                 for o in inst.operands if o in comp.by_name)
+        return _bytes_of(inst.type_str) + ob
+
+    # map operand index -> param name in body
+    params = {}
+    for bi in body.insts:
+        if bi.op == "parameter":
+            m2 = re.search(r"parameter\((\d+)\)", bi.line)
+            if m2:
+                params[int(m2.group(1))] = bi.name
+    total = 0.0
+    for i, op_name in enumerate(inst.operands):
+        full = (_bytes_of(comp.by_name[op_name].type_str)
+                if op_name in comp.by_name else 0)
+        pname = params.get(i)
+        if pname is None:
+            total += full
+            continue
+        consumers = [bi for bi in body.insts if pname in bi.operands]
+        touched, nonslice = 0.0, 0
+        for c in consumers:
+            if c.op in ("dynamic-slice", "slice", "gather"):
+                touched += _bytes_of(c.type_str)
+            elif (c.op == "dynamic-update-slice" and c.operands
+                  and c.operands[0] == pname):
+                upd = (body.by_name.get(c.operands[1])
+                       if len(c.operands) > 1 else None)
+                touched += 2 * (_bytes_of(upd.type_str) if upd is not None
+                                else full)
+            else:
+                nonslice += 1
+        if not consumers:
+            total += full
+        elif nonslice == 0:
+            total += touched
+        else:
+            # mixed consumers: count slices + bound the rest by the fusion
+            # result (a fusion cannot stream more than it materialises
+            # per element without being a reduction of the operand)
+            total += min(full, touched + max(_bytes_of(inst.type_str),
+                                             full // max(len(consumers), 1)))
+
+    def result_bytes(r: Inst) -> float:
+        if r.op == "dynamic-update-slice":
+            upd = body.by_name.get(r.operands[1]) if len(r.operands) > 1 else None
+            return 2.0 * (_bytes_of(upd.type_str) if upd is not None
+                          else _bytes_of(r.type_str))
+        return float(_bytes_of(r.type_str))
+
+    root = body.insts[-1] if body.insts else None
+    for bi in body.insts:
+        if bi.line.strip().startswith("ROOT"):
+            root = bi
+            break
+    if root is None:
+        total += _bytes_of(inst.type_str)
+    elif root.op == "tuple":
+        for o in root.operands:
+            e = body.by_name.get(o)
+            total += result_bytes(e) if e is not None else 0.0
+    else:
+        total += result_bytes(root)
+    return total
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_traffic: float = 0.0
+    num_collectives: int = 0
+    collectives: list = field(default_factory=list)
+    score_bytes: float = 0.0     # attention-score-shaped traffic (see
+                                 # score_dims in analyze_text): the HBM
+                                 # round-trips a fused attention kernel
+                                 # (kernels/flashattn.py) eliminates
+
+
+def _ring_traffic(op: str, result_bytes: int, g: int) -> int:
+    base = op[:-6] if op.endswith("-start") else op
+    rb = result_bytes // 2 if op.endswith("-start") else result_bytes
+    if base == "all-reduce":
+        return int(2 * rb * (g - 1) / max(g, 1))
+    if base == "all-gather":
+        return int(rb * (g - 1) / max(g, 1))
+    if base == "reduce-scatter":
+        return int(rb * (g - 1))
+    if base == "all-to-all":
+        return int(rb * (g - 1) / max(g, 1))
+    return rb                                     # collective-permute
+
+
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _group_size(inst: Inst, default: int) -> int:
+    m = _GROUPS_V2_RE.search(inst.attrs_str)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_V1_RE.search(inst.attrs_str)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def analyze_text(text: str, default_group: int,
+                 score_dims: tuple | None = None) -> Costs:
+    """score_dims=(S, block): instructions shaped like attention score
+    tiles (one axis == S, another == block) have their traffic also
+    accumulated in ``score_bytes`` — the portion a fused attention kernel
+    keeps in VMEM."""
+    comps = parse_module(text)
+
+    def is_score(type_str: str) -> bool:
+        if not score_dims:
+            return False
+        S, blk = score_dims
+        if S == blk:
+            return False
+        for _, dims in _parse_shapes(type_str):
+            if S in dims and blk in dims:
+                return True
+        return False
+    # ENTRY = computation containing no parent reference; HLO marks it, but
+    # we detect it as the one never referenced as a callee.
+    referenced = set()
+    for c in comps.values():
+        for inst in c.insts:
+            referenced.update(_callees(inst, "all"))
+    entries = [c for n, c in comps.items() if n not in referenced]
+    total = Costs()
+    memo_flops: dict = {}
+
+    def flops_of(cname: str, seen=()) -> float:
+        """dot+elementwise flops of computation incl. fusion/while callees."""
+        if cname in memo_flops:
+            return memo_flops[cname]
+        comp = comps.get(cname)
+        if comp is None or cname in seen:
+            return 0.0
+        f = 0.0
+        for inst in comp.insts:
+            if inst.op == "dot":
+                f += _dot_flops(inst, comp)
+            elif inst.op in ("convolution",):
+                f += 2.0 * _elems_of(inst.type_str)   # underestimate; unused
+            elif inst.op in ELEMENTWISE:
+                f += _elems_of(inst.type_str)
+            elif inst.op == "while":
+                body = _OPERAND_RE.search(
+                    re.search(r"body=([%\w.\-]+)", inst.attrs_str).group(1))
+                cond = re.search(r"condition=([%\w.\-]+)", inst.attrs_str)
+                trip = _trip_count(comps[cond.group(1)]) if cond and \
+                    cond.group(1) in comps else 1
+                f += trip * flops_of(body.group(0), seen + (cname,))
+            else:
+                for callee in _callees(inst, "all"):
+                    if callee in comps and inst.op != "while":
+                        f += flops_of(callee, seen + (cname,))
+        memo_flops[cname] = f
+        return f
+
+    def walk_bytes(cname: str, mult: float, seen=()):
+        comp = comps.get(cname)
+        if comp is None or cname in seen:
+            return
+        for inst in comp.insts:
+            if inst.op == "while":
+                cond = re.search(r"condition=([%\w.\-]+)", inst.attrs_str)
+                body = re.search(r"body=([%\w.\-]+)", inst.attrs_str)
+                trip = _trip_count(comps[cond.group(1)]) if cond and \
+                    cond.group(1) in comps else 1
+                if body and body.group(1) in comps:
+                    walk_bytes(body.group(1), mult * trip, seen + (cname,))
+                continue
+            if inst.op in ("call", "conditional", "async-start"):
+                for callee in _callees(inst, "all"):
+                    if callee in comps:
+                        walk_bytes(callee, mult, seen + (cname,))
+                continue
+            if inst.op in COLLECTIVES:
+                rb = _bytes_of(inst.type_str)
+                g = _group_size(inst, default_group)
+                tr = _ring_traffic(inst.op, rb, g)
+                total.collective_traffic += mult * tr
+                total.num_collectives += int(mult)
+                total.collectives.append(
+                    {"op": inst.op, "result_bytes": rb, "group": g,
+                     "traffic": tr, "mult": mult})
+            if inst.op in SKIP_BYTES:
+                continue
+            rb = _bytes_of(inst.type_str)
+            # Slicing ops touch only the slice, not the backing buffer;
+            # DUS/scatter write in place (their result aliases the input).
+            if inst.op in ("dynamic-slice", "slice", "gather"):
+                b = 2 * rb
+            elif inst.op == "dynamic-update-slice":
+                upd = (comp.by_name.get(inst.operands[1])
+                       if len(inst.operands) > 1 else None)
+                ub = _bytes_of(upd.type_str) if upd is not None else rb
+                b = 2 * min(ub, rb)
+            elif inst.op == "scatter":
+                upd = (comp.by_name.get(inst.operands[2])
+                       if len(inst.operands) > 2 else None)
+                ub = _bytes_of(upd.type_str) if upd is not None else rb
+                b = 2 * min(ub, rb)
+            elif inst.op == "fusion":
+                b = _fusion_bytes(inst, comp, comps)
+            else:
+                ob = sum(_bytes_of(comp.by_name[o].type_str)
+                         for o in inst.operands if o in comp.by_name)
+                b = rb + ob
+            total.bytes += mult * b
+            if is_score(inst.type_str) or any(
+                    o in comp.by_name and is_score(comp.by_name[o].type_str)
+                    for o in inst.operands):
+                total.score_bytes += mult * b
+
+    for e in entries:
+        total.flops += flops_of(e.name)
+        walk_bytes(e.name, 1.0)
+    # aggregate collective summary (top by traffic*mult)
+    total.collectives.sort(key=lambda c: -(c["traffic"] * c["mult"]))
+    total.collectives = total.collectives[:15]
+    return total

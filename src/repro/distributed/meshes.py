@@ -1,0 +1,148 @@
+"""Mesh axis conventions and logical-axis sharding rules.
+
+Mesh axes: ``("pod", "data", "model")`` multi-pod, ``("data", "model")``
+single pod.  Parameters and activations carry *logical* axis names
+("embed", "heads", "mlp", "vocab", "batch", ...) which are resolved to mesh
+axes through a rules dict.  The resolver checks divisibility so that a rule
+never produces an invalid sharding (falls back to replication).
+
+The rules dict is the search space of the autoshard hillclimber
+(distributed/autoshard.py) — the paper's circulant tuning reused for
+layout search.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Baseline logical->mesh rules (single- and multi-pod share names; "pod" is
+# simply absent from the single-pod mesh and gets dropped by the resolver).
+#   embed   : FSDP axis of weight matrices (d_model rows)  -> data
+#   heads/kv/mlp/vocab/experts : tensor-parallel columns    -> model
+#   batch   : data parallel                                 -> pod+data
+#   seq     : sequence parallel (long-context decode only)  -> None here
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),          # FSDP weight sharding
+    "heads": ("model",),
+    "kv": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_embed": (),
+    "expert_mlp": ("data",),
+    "seq": (),
+    "kv_seq": (),                # decode KV-cache sequence axis
+    "layers": (),
+    "head_dim": (),
+    "state": (),
+    "conv": (),
+    "lora": (),
+    "img": (),
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[dict] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, rules: Optional[dict] = None):
+    """Activate a mesh + rules so ``constrain``/``spec_for`` resolve."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def current_rules() -> dict:
+    return dict(_CTX.rules or DEFAULT_RULES)
+
+
+def _resolve_dim(name: Optional[str], dim: int, mesh: Mesh, rules: dict,
+                 used: set):
+    """Mesh axes for one logical dim: drop axes that don't divide the dim
+    or were already consumed by an earlier dim of the same spec."""
+    if name is None:
+        return None
+    want = rules.get(name, ())
+    if isinstance(want, str):
+        want = (want,)
+    got = []
+    prod = 1
+    for ax in want:
+        if ax not in mesh.shape or ax in used:
+            continue
+        sz = mesh.shape[ax]
+        if dim % (prod * sz) == 0:
+            got.append(ax)
+            prod *= sz
+    used.update(got)
+    if not got:
+        return None
+    return tuple(got) if len(got) > 1 else got[0]
+
+
+def spec_for(axes: tuple, shape: tuple, mesh: Mesh, rules: dict) -> P:
+    assert len(axes) == len(shape), (axes, shape)
+    used: set = set()
+    return P(*[_resolve_dim(a, d, mesh, rules, used)
+               for a, d in zip(axes, shape)])
+
+
+def sharding_for(axes: tuple, shape: tuple,
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[dict] = None) -> Optional[NamedSharding]:
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules or DEFAULT_RULES
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(axes, shape, mesh, rules))
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint by logical axis names; no-op without a mesh."""
+    if _CTX.mesh is None:
+        return x
+    s = sharding_for(tuple(axes), x.shape)
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def tree_shardings(axes_tree, shapes_tree, mesh=None, rules=None):
+    """Map (axes, shapes) pytrees to NamedShardings (for in/out_shardings).
+
+    ``shapes_tree`` leaves may be shape tuples or anything with ``.shape``
+    (arrays / ShapeDtypeStructs).
+    """
+    mesh = mesh or _CTX.mesh
+    rules = dict(DEFAULT_RULES, **(rules or _CTX.rules or {}))
+
+    def one(a, s):
+        shape = s.shape if hasattr(s, "shape") else s
+        return NamedSharding(mesh, spec_for(a, tuple(shape), mesh, rules))
+
+    return jax.tree.map(
+        one, axes_tree, shapes_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t),
+    )
+
+
+def num_chips(mesh: Mesh) -> int:
+    return math.prod(mesh.devices.shape)

@@ -1,0 +1,59 @@
+"""Fused masked-matmul-and-reduce Pallas kernel:
+total = Σ_{i,j} mask[i,j] · (lhs @ rhsᵀ)[i,j].
+
+The final contraction step of a counting plan (e.g. triangle count
+= Σ A ⊙ (A@A)); fusing the reduction keeps the (M,N) product entirely in
+VMEM — it is never materialised to HBM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(lhs_ref, rhs_ref, mask_ref, out_ref, acc_ref):
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    first = (i == 0) & (j == 0) & (k == 0)
+
+    @pl.when(first)
+    def _init():
+        acc_ref[0, 0] = jnp.float32(0.0)
+
+    prod = jax.lax.dot_general(lhs_ref[...], rhs_ref[...],
+                               (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    acc_ref[0, 0] += jnp.sum(prod * mask_ref[...].astype(jnp.float32))
+
+    # write-out every step (sequential grid on TPU): last value wins
+    out_ref[0, 0] = acc_ref[0, 0]
+
+
+def matreduce(lhs, rhs, mask, *, bm: int = 128, bn: int = 128,
+              bk: int = 128, interpret: bool = False):
+    """Σ mask ⊙ (lhs @ rhsᵀ): lhs (M,K), rhs (N,K), mask (M,N) -> f32 scalar.
+
+    NOTE: with a K-grid the per-(i,j) product tile is partial, so the mask
+    must be applied to partial products — valid because the mask is
+    multiplicative and the reduction is a sum: Σ_k mask⊙P_k = mask⊙Σ_k P_k.
+    """
+    M, K = lhs.shape
+    N = rhs.shape[0]
+    assert rhs.shape[1] == K and mask.shape == (M, N)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    out = pl.pallas_call(
+        _kernel,
+        grid=(M // bm, N // bn, K // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+        interpret=interpret,
+    )(lhs, rhs, mask)
+    return out[0, 0]

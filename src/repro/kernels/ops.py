@@ -1,0 +1,94 @@
+"""jit'd public wrappers for the Pallas kernels (padding, dtypes, reshapes).
+
+``interpret=None`` auto-selects: real TPU lowering on TPU backends,
+interpreter (Python/CPU execution of the kernel body) elsewhere — the
+validation mode this container uses.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import bitset as _bitset
+from repro.kernels import flashattn as _fa
+from repro.kernels import matreduce as _mr
+from repro.kernels import sddmm as _sd
+
+
+def _auto_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(x, bm, bn):
+    M, N = x.shape
+    pm, pn = (-M) % bm, (-N) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def sddmm(lhs, rhs, mask, *, bm=128, bn=128, bk=128, interpret=None):
+    M, N = mask.shape
+    interpret = _auto_interpret(interpret)
+    lhs_p = _pad2(lhs, bm, bk)
+    rhs_p = _pad2(rhs, bn, bk)
+    mask_p = _pad2(mask, bm, bn)
+    out = _sd.sddmm(lhs_p, rhs_p, mask_p, bm=min(bm, lhs_p.shape[0]),
+                    bn=min(bn, rhs_p.shape[0]), bk=min(bk, lhs_p.shape[1]),
+                    interpret=interpret)
+    return out[:M, :N]
+
+
+def masked_matmul_reduce(lhs, rhs, mask, *, bm=128, bn=128, bk=128,
+                         interpret=None):
+    interpret = _auto_interpret(interpret)
+    lhs_p = _pad2(lhs, bm, bk)
+    rhs_p = _pad2(rhs, bn, bk)
+    mask_p = _pad2(mask, bm, bn)
+    return _mr.matreduce(lhs_p, rhs_p, mask_p, bm=min(bm, lhs_p.shape[0]),
+                         bn=min(bn, rhs_p.shape[0]),
+                         bk=min(bk, lhs_p.shape[1]), interpret=interpret)
+
+
+def triangle_count(adj, *, interpret=None):
+    """Σ A ⊙ (A@A) / 6 with the product tile kept in VMEM."""
+    a = jnp.asarray(adj, jnp.float32)
+    return masked_matmul_reduce(a, a, a, interpret=interpret) / 6.0
+
+
+def common_neighbors(adj_bool: np.ndarray, edges: np.ndarray, *,
+                     interpret=None):
+    """Per-edge common-neighbour counts via the bitset kernel."""
+    packed = _bitset.pack_bitsets(adj_bool)
+    rows_a = jnp.asarray(packed[edges[:, 0]])
+    rows_b = jnp.asarray(packed[edges[:, 1]])
+    E = rows_a.shape[0]
+    block = min(256, max(8, E))
+    pad = (-E) % block
+    if pad:
+        z = jnp.zeros((pad, rows_a.shape[1]), rows_a.dtype)
+        rows_a = jnp.concatenate([rows_a, z])
+        rows_b = jnp.concatenate([rows_b, z])
+    out = _bitset.bitset_intersect(rows_a, rows_b, block=block,
+                                   interpret=_auto_interpret(interpret))
+    return out[:E]
+
+
+def flash_attention(q, k, v, *, causal=True, bq=128, bk=128,
+                    interpret=None):
+    """(B, S, H, D) attention via the Pallas kernel."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    interpret = _auto_interpret(interpret)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Skv, D)
+    out = _fa.flash_attention(qf, kf, vf, causal=causal,
+                              bq=min(bq, Sq), bk=min(bk, Skv),
+                              interpret=interpret)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

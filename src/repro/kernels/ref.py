@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def sddmm_ref(lhs, rhs, mask):
+    prod = jnp.einsum("mk,nk->mn", lhs.astype(jnp.float32),
+                      rhs.astype(jnp.float32))
+    return prod * mask.astype(jnp.float32)
+
+
+def matreduce_ref(lhs, rhs, mask):
+    return jnp.sum(sddmm_ref(lhs, rhs, mask))
+
+
+def bitset_intersect_ref(rows_a, rows_b):
+    a = np.asarray(rows_a, np.uint32)
+    b = np.asarray(rows_b, np.uint32)
+    x = a & b
+    # numpy popcount via bit_count (numpy >= 2)
+    return x.astype(np.uint32).view(np.uint32)
+
+
+def bitset_popcount_ref(rows_a, rows_b):
+    x = np.bitwise_and(np.asarray(rows_a, np.uint32),
+                       np.asarray(rows_b, np.uint32))
+    cnt = np.zeros(x.shape[0], np.int32)
+    for w in range(x.shape[1]):
+        cnt += np.bitwise_count(x[:, w]).astype(np.int32)
+    return cnt
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def triangle_count_ref(adj):
+    a = jnp.asarray(adj, jnp.float32)
+    return jnp.sum(a * (a @ a)) / 6.0

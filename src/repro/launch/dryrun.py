@@ -1,0 +1,310 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count on first init).  --host-devices N overrides for CI smokes.
+import sys  # noqa: E402
+
+if "--host-devices" in sys.argv:
+    _n = sys.argv[sys.argv.index("--host-devices") + 1]
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces:
+  * proof of compile (sharding coherence) on the production mesh,
+  * memory_analysis (bytes per device),
+  * cost_analysis FLOPs/bytes + parsed collective traffic -> roofline terms.
+
+Results are cached as JSON under benchmarks/results/dryrun/<mesh>/ so the
+grid is resumable.  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --summary
+"""
+import argparse     # noqa: E402
+import json         # noqa: E402
+import pathlib      # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import (SHAPES, cell_is_applicable, input_specs)  # noqa: E402
+from repro.configs.registry import ARCH_IDS, get_config  # noqa: E402
+from repro.distributed import hlo_analysis  # noqa: E402
+from repro.distributed.meshes import (sharding_ctx, tree_shardings)  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# Per-cell rules (baseline; the autoshard hillclimber perturbs these)
+# ---------------------------------------------------------------------------
+
+def rules_for(cfg, shape, overrides=None):
+    rules = {}
+    if shape.kind == "train":
+        # DEFAULT_RULES = FSDP + TP; fine-grained MoE (>=256 experts) gets
+        # full-mesh expert parallelism (each device owns whole experts)
+        if cfg.moe is not None and cfg.moe.num_experts % 256 == 0:
+            rules["experts"] = ("data", "model")
+            rules["expert_mlp"] = ()
+    else:
+        # serving: replicate weights across data (low-latency TP), except
+        # MoE experts which are expert-parallel across the whole mesh.
+        rules["embed"] = ()
+        # MLA: shard the latent-cache dim over model for decode only
+        # (hillclimbed: halves decode memory term and HBM/dev on
+        # deepseek-v3; hurts prefill where the latent is recomputed)
+        rules["lora"] = (("model",) if cfg.mla is not None
+                         and shape.kind == "decode" else ())
+        if cfg.moe is not None:
+            total = 256
+            if cfg.moe.num_experts % total == 0:
+                rules["experts"] = ("data", "model")
+                rules["expert_mlp"] = ()
+            else:
+                rules["experts"] = ("model",)
+                rules["expert_mlp"] = ("data",)
+        if shape.name == "long_500k":
+            rules["kv_seq"] = ("pod", "data")    # sequence-parallel KV
+    rules.update(overrides or {})
+    return rules
+
+
+def default_microbatches(cfg, shape) -> int:
+    n = cfg.param_count()
+    if n > 100e9:
+        return 8
+    if n > 10e9:
+        return 4
+    return 2
+
+
+def input_axes(cfg, shape):
+    ax = {}
+    if shape.kind == "train":
+        ax["inputs"] = (("batch", "seq", None) if cfg.input_mode == "embeddings"
+                        else ("batch", "seq"))
+        ax["labels"] = ("batch", "seq")
+    elif shape.kind == "prefill":
+        ax["inputs"] = (("batch", "seq", None) if cfg.input_mode == "embeddings"
+                        else ("batch", "seq"))
+    else:
+        ax["inputs"] = (("batch", None, None) if cfg.input_mode == "embeddings"
+                        else ("batch", None))
+        ax["positions"] = ("batch",)
+    if cfg.family == "vlm":
+        ax["image_embeds"] = ("batch", "img", None)
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg, shape, mesh, rules, microbatches=None):
+    """Returns (fn, args, in_shardings, out_shardings, donate_argnums)."""
+    from repro.models.transformer import Model, cache_specs
+    from repro.serve.engine import make_decode_step, make_prefill_step
+    from repro.train import optimizer as opt_mod
+    from repro.train.train_step import (abstract_state, make_train_step,
+                                        state_axes)
+
+    specs = input_specs(cfg, shape)
+    in_ax = input_axes(cfg, shape)
+    repl = NamedSharding(mesh, P())
+
+    def shard_of(axes, abstract):
+        return tree_shardings(axes, abstract, mesh, rules)
+
+    if shape.kind == "train":
+        state_dtype = "bfloat16" if cfg.param_count() > 50e9 else "float32"
+        opt_cfg = opt_mod.OptConfig(state_dtype=state_dtype)
+        mb = microbatches or default_microbatches(cfg, shape)
+        fn = make_train_step(cfg, opt_cfg, microbatches=mb)
+        state = abstract_state(cfg, opt_cfg)
+        st_sh = shard_of(state_axes(cfg), state)
+        batch_keys = [k for k in ("inputs", "labels", "image_embeds")
+                      if k in specs]
+        batch = {k: specs[k] for k in batch_keys}
+        b_sh = {k: shard_of(in_ax[k], batch[k]) for k in batch_keys}
+        metrics_sh = {k: repl for k in ("loss", "ce", "lr", "grad_norm")}
+        wrapped = lambda state, batch: fn(state, batch)
+        return (wrapped, (state, batch), (st_sh, b_sh),
+                (st_sh, metrics_sh), (0,))
+
+    model = Model(cfg)
+    params = model.abstract_params()
+    p_sh = shard_of(model.param_axes(), params)
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        cs, cax = cache_specs(cfg, shape.batch, shape.seq)
+        c_sh = shard_of(cax, cs)
+        args = [params, specs["inputs"]]
+        in_sh = [p_sh, shard_of(in_ax["inputs"], specs["inputs"])]
+        if "image_embeds" in specs:
+            args.append(specs["image_embeds"])
+            in_sh.append(shard_of(in_ax["image_embeds"], specs["image_embeds"]))
+        logits_sh = shard_of(("batch", "vocab"),
+                             (shape.batch, cfg.vocab_size))
+        return (fn, tuple(args), tuple(in_sh), (logits_sh, c_sh), ())
+
+    # decode
+    fn = make_decode_step(cfg)
+    cs, cax = cache_specs(cfg, shape.batch, shape.seq)
+    c_sh = shard_of(cax, cs)
+    args = [params, cs, specs["inputs"], specs["positions"]]
+    in_sh = [p_sh, c_sh,
+             shard_of(in_ax["inputs"], specs["inputs"]),
+             shard_of(in_ax["positions"], specs["positions"])]
+    if "image_embeds" in specs:
+        args.append(specs["image_embeds"])
+        in_sh.append(shard_of(in_ax["image_embeds"], specs["image_embeds"]))
+    logits_sh = shard_of(("batch", "vocab"), (shape.batch, cfg.vocab_size))
+    return (fn, tuple(args), tuple(in_sh), (logits_sh, c_sh), (1,))
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             rule_overrides=None, microbatches=None, tag: str = "",
+             save: bool = True):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not cell_is_applicable(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "skipped": "long_500k requires sub-quadratic mixing"}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    rules = rules_for(cfg, shape, rule_overrides)
+
+    t0 = time.time()
+    with sharding_ctx(mesh, rules):
+        fn, args, in_sh, out_sh, donate = build_cell(
+            cfg, shape, mesh, rules, microbatches)
+        jf = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=donate)
+        lowered = jf.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    score_dims = ((shape.seq, min(cfg.flash_block, shape.seq))
+                  if shape.kind in ("train", "prefill") else None)
+    roof = hlo_analysis.analyze(compiled, chips, score_dims=score_dims)
+    tokens = shape.batch * (shape.seq if shape.kind == "train" else 1)
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        mf = hlo_analysis.model_flops_train(n_active, tokens)
+    else:
+        mf = hlo_analysis.model_flops_decode(n_active, tokens)
+        if shape.kind == "prefill":
+            mf = hlo_analysis.model_flops_decode(
+                n_active, shape.batch * shape.seq)
+    total_hlo_flops = roof.flops_per_device * chips
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape.kind, "chips": chips, "tag": tag,
+        "rules": {k: list(v) if isinstance(v, tuple) else v
+                  for k, v in rules.items()},
+        "microbatches": microbatches,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "params": cfg.param_count(), "active_params": n_active,
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / total_hlo_flops) if total_hlo_flops else 0,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_est_bytes": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        **roof.as_dict(),
+    }
+    if save:
+        out = RESULTS_DIR / mesh_kind
+        out.mkdir(parents=True, exist_ok=True)
+        name = f"{arch}__{shape_name}{('__' + tag) if tag else ''}.json"
+        (out / name).write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def fmt_cell(r):
+    if "skipped" in r:
+        return f"{r['arch']:22s} {r['shape']:12s} SKIP ({r['skipped']})"
+    m = r["memory"]["peak_est_bytes"] / 2**30
+    return (f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+            f"comp={r['t_compute']*1e3:9.2f}ms mem={r['t_memory']*1e3:9.2f}ms "
+            f"coll={r['t_collective']*1e3:9.2f}ms dom={r['dominant']:10s} "
+            f"useful={r['useful_flops_ratio']:5.1%} hbm/dev={m:6.2f}GiB "
+            f"compile={r['compile_s']:.0f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--summary", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--set", action="append", default=[],
+                    help="rule override, e.g. --set embed=pod,data")
+    ap.add_argument("--host-devices", default="512")
+    args = ap.parse_args()
+
+    if args.summary:
+        for mk in ("single", "multi"):
+            d = RESULTS_DIR / mk
+            if not d.exists():
+                continue
+            print(f"=== mesh: {mk} ===")
+            for f in sorted(d.glob("*.json")):
+                print(fmt_cell(json.loads(f.read_text())))
+        return
+
+    overrides = {}
+    for s in args.set:
+        k, _, v = s.partition("=")
+        overrides[k] = tuple(x for x in v.split(",") if x)
+
+    cells = []
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for a in archs:
+        for s in shapes:
+            cells.append((a, s))
+
+    failures = []
+    for a, s in cells:
+        out = (RESULTS_DIR / args.mesh /
+               f"{a}__{s}{('__' + args.tag) if args.tag else ''}.json")
+        if out.exists() and not args.force:
+            print(f"cached {a} {s}")
+            continue
+        try:
+            rec = run_cell(a, s, args.mesh, overrides or None,
+                           args.microbatches, args.tag)
+            print(fmt_cell(rec), flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((a, s, repr(e)))
+            print(f"FAIL {a} {s}: {e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        print(f"{len(failures)} failures")
+        sys.exit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

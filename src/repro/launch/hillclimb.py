@@ -1,0 +1,53 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (must precede any jax import — see dryrun.py)
+
+"""§Perf hillclimb driver: circulant-tuning layout search per cell.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb \
+      --arch qwen3-4b --shape train_4k --mesh single --budget 18
+
+Every evaluation is a full lower+compile+HLO-roofline of the cell; results
+land in benchmarks/results/autoshard/ and the search log in
+benchmarks/results/hillclimb_<cell>.json.
+"""
+import argparse     # noqa: E402
+import json         # noqa: E402
+import pathlib      # noqa: E402
+
+from repro.distributed.autoshard import circulant_autoshard  # noqa: E402
+
+OUT = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--budget", type=int, default=18)
+    ap.add_argument("--rounds", type=int, default=2)
+    args = ap.parse_args()
+
+    assign, rec, history = circulant_autoshard(
+        args.arch, args.shape, args.mesh, max_rounds=args.rounds,
+        budget_evals=args.budget)
+    log = {
+        "arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+        "best_assignment": {k: list(v) if isinstance(v, tuple) else v
+                            for k, v in assign.items()},
+        "best": {k: rec[k] for k in
+                 ("t_compute", "t_memory", "t_collective", "dominant",
+                  "useful_flops_ratio")},
+        "best_memory_gib": rec["memory"]["peak_est_bytes"] / 2**30,
+        "history": [({k: list(v) if isinstance(v, tuple) else v
+                      for k, v in a.items()}, c) for a, c in history],
+    }
+    out = OUT / f"hillclimb_{args.arch}__{args.shape}__{args.mesh}.json"
+    out.write_text(json.dumps(log, indent=1))
+    print(f"wrote {out}")
+    print(json.dumps(log["best"], indent=1))
+
+
+if __name__ == "__main__":
+    main()

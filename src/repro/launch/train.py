@@ -1,0 +1,104 @@
+"""End-to-end training driver.
+
+Runs any registry config (full or reduced) with the complete substrate:
+deterministic data pipeline, microbatched AdamW, async checkpointing,
+preemption handling, restart-from-latest, straggler watchdog, optional
+gradient compression.  On this CPU container the intended run is the
+~130M ``repro-100m`` config:
+
+  PYTHONPATH=src python -m repro.launch.train --arch repro-100m \
+      --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ck100m
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import reduced_config
+from repro.configs.registry import get_config
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt_mod
+from repro.train.data import TokenPipeline
+from repro.train.fault_tolerance import PreemptionGuard, StepWatchdog
+from repro.train.train_step import init_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="repro-100m")
+    ap.add_argument("--reduced", action="store_true",
+                    help="shrink the config for smoke runs")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    opt_cfg = opt_mod.OptConfig(lr=args.lr, warmup_steps=20,
+                                total_steps=max(args.steps, 100))
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, args.microbatches),
+                      donate_argnums=(0,))
+    pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch,
+                         seed=args.seed)
+
+    state = init_state(cfg, opt_cfg, jax.random.PRNGKey(args.seed))
+    start = 0
+    writer = None
+    if args.ckpt_dir:
+        writer = ckpt.AsyncCheckpointer(args.ckpt_dir)
+        restored, s = ckpt.restore_latest(args.ckpt_dir, state)
+        if restored is not None:
+            state, start = restored, s
+            print(f"resumed from step {start}")
+
+    n_params = sum(int(np.prod(x.shape))
+                   for x in jax.tree.leaves(state["params"]))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"tokens/step={args.batch * args.seq}")
+
+    guard = PreemptionGuard()
+    watchdog = StepWatchdog()
+    losses = []
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
+        watchdog.start()
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        dt = watchdog.stop(step)
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d}  loss {loss:.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}  {dt:.2f}s",
+                  flush=True)
+        if writer and ((step + 1) % args.ckpt_every == 0
+                       or guard.requested):
+            writer.save(step + 1, state)
+            if guard.requested:
+                print(f"preempted: saved step {step + 1}, exiting")
+                writer.wait()
+                return losses
+    if writer:
+        writer.save(args.steps, state)
+        writer.wait()
+    if watchdog.straggler_events:
+        print(f"straggler steps: {watchdog.straggler_events}")
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""DeepSeek-V3 Multi-head Latent Attention.
+
+Train/prefill expand the latent to full per-head K/V; decode uses the
+weight-absorption trick and attends directly in latent space, so the KV
+cache stores only (kv_lora_rank + qk_rope_dim) floats per token.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.meshes import constrain
+from repro.models.layers import (NEG_INF, apply_rope, cache_update,
+                                 causal_attention, rms_norm)
+from repro.models.params import P
+
+
+def mla_specs(cfg):
+    m, d, H = cfg.mla, cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq_a": P((d, m.q_lora_rank), ("embed", "lora")),
+        "q_norm": P((m.q_lora_rank,), ("lora",), "ones"),
+        "wq_b": P((m.q_lora_rank, H * qk), ("lora", "heads")),
+        "wkv_a": P((d, m.kv_lora_rank + m.qk_rope_dim), ("embed", "lora")),
+        "kv_norm": P((m.kv_lora_rank,), ("lora",), "ones"),
+        "wkv_b": P((m.kv_lora_rank, H * (m.qk_nope_dim + m.v_dim)),
+                   ("lora", "heads")),
+        "wo": P((H * m.v_dim, d), ("heads", "embed")),
+    }
+
+
+def mla_attention(p, x, cfg, *, positions, mode: str, cache=None):
+    m, H = cfg.mla, cfg.num_heads
+    B, S, _ = x.shape
+    nope, rope_d, vd, r = m.qk_nope_dim, m.qk_rope_dim, m.v_dim, m.kv_lora_rank
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    rope_pos = positions[:, None] if mode == "decode" else positions
+
+    q = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps) @ p["wq_b"]
+    q = q.reshape(B, S, H, nope + rope_d)
+    q = constrain(q, "batch", "seq", "heads", None)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = apply_rope(q_pe, rope_pos, cfg.rope_theta)
+
+    ckv_full = x @ p["wkv_a"]                                   # (B,S,r+rope)
+    ckv = rms_norm(ckv_full[..., :r], p["kv_norm"], cfg.norm_eps)
+    kpe = apply_rope(ckv_full[..., None, r:], rope_pos, cfg.rope_theta)
+    kpe = kpe[..., 0, :]                                        # (B,S,rope)
+
+    wkv_b = p["wkv_b"].reshape(r, H, nope + vd)
+    w_k = wkv_b[..., :nope]                                     # (r,H,nope)
+    w_v = wkv_b[..., nope:]                                     # (r,H,vd)
+
+    if mode in ("train", "prefill"):
+        k_nope = jnp.einsum("bsr,rhn->bshn", ckv, w_k)
+        v = jnp.einsum("bsr,rhv->bshv", ckv, w_v)
+        v = constrain(v, "batch", "seq", "heads", None)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kpe[:, :, None, :], (B, S, H, rope_d))],
+            axis=-1)
+        k = constrain(k, "batch", "seq", "heads", None)
+        qc = jnp.concatenate([q_nope, q_pe], axis=-1)
+        o = causal_attention(qc, k, v, flash_block=cfg.flash_block,
+                             scale=scale)
+        o = o.reshape(B, S, H * vd)
+        new_cache = {"ckv": ckv, "kpe": kpe} if mode == "prefill" else {}
+    else:
+        # weight absorption: score = (q_nope·W_k)·ckv_t + q_pe·kpe_t.
+        # Caches stay in storage dtype with f32 accumulation, and their
+        # sharding is pinned across the layer scan (see layers.py §Perf).
+        cc = cache_update(cache["ckv"], ckv, positions)          # (B,Sc,r)
+        ck = cache_update(cache["kpe"], kpe, positions)          # (B,Sc,rope)
+        cc = constrain(cc, "batch", "kv_seq", "lora")
+        ck = constrain(ck, "batch", "kv_seq", None)
+        Sc = cc.shape[1]
+        q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_k)
+        s = (jnp.einsum("bqhr,btr->bqht", q_abs, cc,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bqhe,bte->bqht", q_pe, ck,
+                          preferred_element_type=jnp.float32)) * scale
+        valid = jnp.arange(Sc)[None, :] <= positions[:, None]
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        probs = jax.nn.softmax(s, axis=-1).astype(cc.dtype)
+        o_lat = jnp.einsum("bqht,btr->bqhr", probs, cc,
+                           preferred_element_type=jnp.float32)   # (B,1,H,r)
+        o = jnp.einsum("bqhr,rhv->bqhv", o_lat.astype(x.dtype), w_v)
+        o = o.reshape(B, 1, H * vd)
+        new_cache = {"ckv": cc, "kpe": ck}
+    y = o @ p["wo"]
+    return constrain(y, "batch", "seq", None), new_cache

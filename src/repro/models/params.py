@@ -1,0 +1,72 @@
+"""Parameter spec trees: shapes + logical axes + initializers.
+
+A layer is described by a dict of ``P`` specs; ``init_tree`` materialises
+parameters, ``axes_tree`` extracts the logical-axes pytree used to derive
+shardings, ``abstract_tree`` gives ShapeDtypeStructs for allocation-free
+AOT lowering.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class P(NamedTuple):
+    shape: tuple
+    axes: tuple                     # logical axis names, len == len(shape)
+    init: str = "normal"            # normal | zeros | ones | a_log | dt_bias
+    scale: Optional[float] = None   # stddev override for "normal"
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _init_leaf(spec: P, key, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "a_log":        # mamba2 A_log: log U(1, 16)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if spec.init == "dt_bias":      # softplus^-1 of U(1e-3, 1e-1)
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(dtype)
+    if spec.init == "normal":
+        fan_in = spec.shape[0] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+    raise ValueError(spec.init)
+
+
+def init_tree(specs, key, dtype):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def axes_tree(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def abstract_tree(specs, dtype):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+                        specs, is_leaf=is_spec)
+
+
+def stacked(specs, n: int):
+    """Add a leading (n,)-'layers' axis to every spec (for scan segments)."""
+    return jax.tree.map(
+        lambda s: P((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale),
+        specs, is_leaf=is_spec)
+
+
+def count_params(specs) -> int:
+    return sum(int(np.prod(s.shape))
+               for s in jax.tree.leaves(specs, is_leaf=is_spec))

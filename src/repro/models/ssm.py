@@ -1,0 +1,169 @@
+"""Mamba2 / SSD (state-space duality) mixer.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic
+attention-like term + inter-chunk state recurrence); decode is the O(1)
+recurrent state update.  Follows Dao & Gu 2024 (arXiv:2405.21060).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.meshes import constrain
+from repro.models.layers import rms_norm
+from repro.models.params import P
+
+NEG_INF = -1e30
+
+
+def ssm_specs(cfg):
+    s, d = cfg.ssm, cfg.d_model
+    di = cfg.d_inner
+    g = s.n_groups * s.d_state
+    H = cfg.ssm_heads
+    conv_dim = di + 2 * g
+    return {
+        "wz": P((d, di), ("embed", "mlp")),
+        "wxbc": P((d, conv_dim), ("embed", "mlp")),
+        "wdt": P((d, H), ("embed", "heads")),
+        "conv_w": P((s.d_conv, conv_dim), ("conv", "mlp"), scale=0.2),
+        "conv_b": P((conv_dim,), ("mlp",), "zeros"),
+        "a_log": P((H,), ("heads",), "a_log"),
+        "d_skip": P((H,), ("heads",), "ones"),
+        "dt_bias": P((H,), ("heads",), "dt_bias"),
+        "norm": P((di,), ("mlp",), "ones"),
+        "out": P((di, d), ("mlp", "embed")),
+    }
+
+
+def _segsum(x):
+    """x: (..., Q) -> (..., Q, Q); out[i,j] = sum_{j<k<=i} x[k], -inf for i<j."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, d, NEG_INF)
+
+
+def ssd_chunked(xs, dt, A, B_, C_, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    xs: (B,L,H,P) inputs; dt: (B,L,H) f32; A: (H,) negative; B_,C_: (B,L,H,N)
+    (already broadcast from groups to heads).  Returns (y (B,L,H,P),
+    final_state (B,H,P,N)).
+    """
+    Bb, L, H, Pd = xs.shape
+    N = B_.shape[-1]
+    if L % chunk:
+        # pad with dt=0 steps: zero contribution, unit decay — exact
+        pad = chunk - L % chunk
+        padt = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                                 [(0, 0)] * (t.ndim - 2))
+        y, final = ssd_chunked(padt(xs), padt(dt), A, padt(B_), padt(C_),
+                               chunk, init_state)
+        return y[:, :L], final
+    Cn, Q = L // chunk, chunk
+
+    r = lambda t: t.reshape((Bb, Cn, Q) + t.shape[2:])
+    xc, dtc, Bc, Cc = r(xs), r(dt), r(B_), r(C_)
+    dA = dtc * A[None, None, None, :]                            # (B,Cn,Q,H)
+    dA = jnp.moveaxis(dA, -1, 2)                                 # (B,Cn,H,Q)
+    cs = jnp.cumsum(dA, axis=-1)                                 # inclusive
+
+    # intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(dA))                                  # (B,Cn,H,Q,Q)
+    dtx = xc * dtc[..., None]                                    # (B,Cn,Q,H,P)
+    Ydiag = jnp.einsum("bcqhn,bcshn,bchqs,bcshp->bcqhp",
+                       Cc.astype(jnp.float32), Bc.astype(jnp.float32),
+                       Lmat, dtx.astype(jnp.float32))
+
+    # end-of-chunk states
+    decay = jnp.exp(cs[..., -1:] - cs)                           # (B,Cn,H,Q)
+    states = jnp.einsum("bcshn,bchs,bcshp->bchpn",
+                        Bc.astype(jnp.float32),
+                        decay, dtx.astype(jnp.float32))          # (B,Cn,H,P,N)
+
+    # inter-chunk recurrence
+    total = jnp.exp(cs[..., -1])                                 # (B,Cn,H)
+    s0 = (jnp.zeros((Bb, H, Pd, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s_prev, xs_):
+        st, tot = xs_
+        return st + tot[..., None, None] * s_prev, s_prev
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                # (B,Cn,H,P,N)
+
+    Yoff = jnp.einsum("bcqhn,bchpn,bchq->bcqhp",
+                      Cc.astype(jnp.float32), prev_states, jnp.exp(cs))
+    y = (Ydiag + Yoff).reshape(Bb, L, H, Pd)
+    return y.astype(xs.dtype), final.astype(xs.dtype)
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B,L,C), w (K,C) -> (B,L,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return y + b[None, None, :]
+
+
+def _expand_groups(t, H):
+    """(B,...,G,N) -> (B,...,H,N)."""
+    G = t.shape[-2]
+    return jnp.repeat(t, H // G, axis=-2)
+
+
+def mamba_mixer(p, x, cfg, *, mode: str, cache=None):
+    """Mamba2 block mixer.  x: (B,S,d).  Returns (y, new_cache)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    di, H, Pd, N, G = cfg.d_inner, cfg.ssm_heads, s.head_dim, s.d_state, s.n_groups
+    gdim = G * N
+
+    z = x @ p["wz"]                                              # (B,S,di)
+    xbc_raw = x @ p["wxbc"]                                      # (B,S,di+2g)
+    xbc_raw = constrain(xbc_raw, "batch", "seq", "mlp")
+    dt_raw = x @ p["wdt"]                                        # (B,S,H)
+
+    if mode in ("train", "prefill"):
+        xbc = jax.nn.silu(_causal_conv(xbc_raw, p["conv_w"], p["conv_b"]))
+        xs = xbc[..., :di].reshape(B, S, H, Pd)
+        B_ = _expand_groups(xbc[..., di:di + gdim].reshape(B, S, G, N), H)
+        C_ = _expand_groups(xbc[..., di + gdim:].reshape(B, S, G, N), H)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        A = -jnp.exp(p["a_log"].astype(jnp.float32))
+        y, final = ssd_chunked(xs, dt, A, B_, C_, min(s.chunk, S))
+        y = y + p["d_skip"].astype(x.dtype)[None, None, :, None] * xs
+        y = y.reshape(B, S, di)
+        if mode == "prefill":
+            conv_cache = xbc_raw[:, S - (s.d_conv - 1):, :]       # (B,K-1,C)
+            new_cache = {"conv": conv_cache, "ssm": final}
+        else:
+            new_cache = {}
+    else:                                                        # decode, S == 1
+        conv_cache, state = cache["conv"], cache["ssm"]
+        full = jnp.concatenate([conv_cache, xbc_raw], axis=1)     # (B,K,C)
+        w = p["conv_w"]
+        conv_out = jnp.einsum("bkc,kc->bc", full, w) + p["conv_b"]
+        xbc = jax.nn.silu(conv_out)                               # (B,C)
+        xs = xbc[..., :di].reshape(B, H, Pd)
+        B_ = _expand_groups(xbc[..., di:di + gdim].reshape(B, G, N), H)
+        C_ = _expand_groups(xbc[..., di + gdim:].reshape(B, G, N), H)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))  # (B,H)
+        A = -jnp.exp(p["a_log"].astype(jnp.float32))
+        dA = jnp.exp(dt * A[None, :])                             # (B,H)
+        state = (state.astype(jnp.float32) * dA[..., None, None]
+                 + jnp.einsum("bh,bhp,bhn->bhpn", dt,
+                              xs.astype(jnp.float32), B_.astype(jnp.float32)))
+        y = jnp.einsum("bhpn,bhn->bhp", state, C_.astype(jnp.float32))
+        y = y.astype(x.dtype) + p["d_skip"].astype(x.dtype)[None, :, None] * xs
+        y = y.reshape(B, 1, di)
+        new_cache = {"conv": full[:, 1:, :], "ssm": state.astype(x.dtype)}
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return constrain(y @ p["out"], "batch", "seq", None), new_cache

@@ -1,0 +1,282 @@
+"""Composable decoder: layer segments, scan-over-periods, KV/SSM caches.
+
+The layer stack is compiled as a list of *segments*; each segment is a
+period of heterogeneous *slots* (mixer + ffn) repeated ``n`` times and
+executed with ``lax.scan`` over stacked parameters, keeping the HLO small
+for 61-72 layer models.  Caches are pytrees scanned alongside parameters.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.meshes import constrain
+from repro.models import layers as L
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.params import P, abstract_tree, axes_tree, init_tree, stacked
+
+
+class Slot(NamedTuple):
+    kind: str            # 'A' | 'M' | 'X'
+    ffn: str             # 'mlp' | 'moe' | 'none'
+    ff: int              # mlp hidden size (unused for moe/none)
+
+
+class Segment(NamedTuple):
+    slots: tuple
+    n: int
+
+
+def _lcm(a, b):
+    import math
+    return a * b // math.gcd(a, b)
+
+
+def build_segments(cfg: ModelConfig) -> list[Segment]:
+    kinds = cfg.pattern_layers()
+
+    def slot_for(i):
+        kind = kinds[i]
+        if kind == "M" and cfg.family == "ssm":
+            return Slot(kind, "none", 0)
+        if cfg.is_moe_layer(i):
+            return Slot(kind, "moe", 0)
+        ff = (cfg.dense_prefix_ff
+              if (cfg.moe is not None and i < cfg.dense_prefix
+                  and cfg.dense_prefix_ff) else cfg.d_ff)
+        return Slot(kind, "mlp", ff)
+
+    segs = []
+    start = 0
+    if cfg.dense_prefix:
+        slots = tuple(slot_for(i) for i in range(cfg.dense_prefix))
+        assert len(set(slots)) == 1, "dense prefix must be homogeneous"
+        segs.append(Segment((slots[0],), cfg.dense_prefix))
+        start = cfg.dense_prefix
+    period = _lcm(len(cfg.layer_pattern),
+                  cfg.moe.every_k_layers if cfg.moe else 1)
+    rest = cfg.num_layers - start
+    assert rest % period == 0, (cfg.name, rest, period)
+    slots = tuple(slot_for(start + j) for j in range(period))
+    # verify periodicity
+    for i in range(start, cfg.num_layers):
+        assert slot_for(i) == slots[(i - start) % period], (cfg.name, i)
+    segs.append(Segment(slots, rest // period))
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+def _mixer_specs(cfg, slot: Slot):
+    if slot.kind == "A":
+        return mla_mod.mla_specs(cfg) if cfg.mla is not None else L.attn_specs(cfg)
+    if slot.kind == "M":
+        return ssm_mod.ssm_specs(cfg)
+    if slot.kind == "X":
+        return L.cross_attn_specs(cfg)
+    raise ValueError(slot.kind)
+
+
+def _slot_specs(cfg, slot: Slot):
+    d = cfg.d_model
+    s = {"norm1": P((d,), ("embed",), "ones"), "mixer": _mixer_specs(cfg, slot)}
+    if slot.kind == "X":
+        s["gate_attn"] = P((), (), "zeros")
+        s["gate_ffn"] = P((), (), "zeros")
+    if slot.ffn == "mlp":
+        s["norm2"] = P((d,), ("embed",), "ones")
+        s["ffn"] = L.mlp_specs(cfg, slot.ff)
+    elif slot.ffn == "moe":
+        s["norm2"] = P((d,), ("embed",), "ones")
+        s["ffn"] = moe_mod.moe_specs(cfg)
+    return s
+
+
+def param_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    specs = {
+        "embed": P((cfg.vocab_size, d), ("vocab", "embed"), scale=0.02),
+        "final_norm": P((d,), ("embed",), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P((d, cfg.vocab_size), ("embed", "vocab"))
+    specs["segments"] = [
+        {f"slot{j}": stacked(_slot_specs(cfg, slot), seg.n)
+         for j, slot in enumerate(seg.slots)}
+        for seg in build_segments(cfg)
+    ]
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+# ---------------------------------------------------------------------------
+
+def _slot_cache_spec(cfg, slot: Slot, B: int, S: int):
+    f = jnp.dtype(cfg.compute_dtype)
+    if slot.kind == "A":
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {"ckv": ((B, S, m.kv_lora_rank), ("batch", "kv_seq", "lora"), f),
+                    "kpe": ((B, S, m.qk_rope_dim), ("batch", "kv_seq", None), f)}
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+        # flattened (kv*hd) layout: shards exactly like the K/V projection
+        # outputs, so the scan-carried cache is never re-sharded (§Perf)
+        return {"k": ((B, S, kv * hd), ("batch", "kv_seq", "kv"), f),
+                "v": ((B, S, kv * hd), ("batch", "kv_seq", "kv"), f)}
+    if slot.kind == "M":
+        s = cfg.ssm
+        conv_dim = cfg.d_inner + 2 * s.n_groups * s.d_state
+        return {"conv": ((B, s.d_conv - 1, conv_dim), ("batch", None, "mlp"), f),
+                "ssm": ((B, cfg.ssm_heads, s.head_dim, s.d_state),
+                        ("batch", "heads", None, "state"), f)}
+    if slot.kind == "X":
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+        T = cfg.num_image_tokens
+        return {"xk": ((B, T, kv, hd), ("batch", "img", "kv", "head_dim"), f),
+                "xv": ((B, T, kv, hd), ("batch", "img", "kv", "head_dim"), f)}
+    raise ValueError(slot.kind)
+
+
+def cache_specs(cfg: ModelConfig, B: int, S: int):
+    """Returns (ShapeDtypeStruct tree, axes tree) for the decode cache."""
+    shapes, axes = [], []
+    for seg in build_segments(cfg):
+        sh, ax = {}, {}
+        for j, slot in enumerate(seg.slots):
+            spec = _slot_cache_spec(cfg, slot, B, S)
+            sh[f"slot{j}"] = {k: jax.ShapeDtypeStruct((seg.n,) + s, d)
+                              for k, (s, a, d) in spec.items()}
+            ax[f"slot{j}"] = {k: ("layers",) + a
+                              for k, (s, a, d) in spec.items()}
+        shapes.append(sh)
+        axes.append(ax)
+    return shapes, axes
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int):
+    shapes, _ = cache_specs(cfg, B, S)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _apply_slot(cfg, slot: Slot, p, x, *, positions, mode, cache, image_embeds):
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if slot.kind == "A":
+        fn = mla_mod.mla_attention if cfg.mla is not None else L.attention
+        y, nc = fn(p["mixer"], h, cfg, positions=positions, mode=mode,
+                   cache=cache)
+    elif slot.kind == "M":
+        y, nc = ssm_mod.mamba_mixer(p["mixer"], h, cfg, mode=mode, cache=cache)
+    elif slot.kind == "X":
+        y, nc = L.cross_attention(p["mixer"], h, image_embeds, cfg,
+                                  mode=mode, cache=cache)
+        y = y * jnp.tanh(p["gate_attn"]).astype(y.dtype)
+    x = x + y
+    if slot.ffn != "none":
+        h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if slot.ffn == "moe":
+            f, aux = moe_mod.moe_apply(p["ffn"], h2, cfg)
+        else:
+            f = L.mlp_apply(p["ffn"], h2)
+        if slot.kind == "X":
+            f = f * jnp.tanh(p["gate_ffn"]).astype(f.dtype)
+        x = x + f
+    return x, nc, aux
+
+
+def _run_segment(cfg, seg: Segment, seg_params, x, *, positions, mode,
+                 caches, image_embeds):
+    nslots = len(seg.slots)
+
+    def body(carry, per_layer):
+        xx, aux_sum = carry
+        lp, lc = per_layer
+        new_c = {}
+        for j, slot in enumerate(seg.slots):
+            c = lc.get(f"slot{j}") if lc else None
+            xx, nc, aux = _apply_slot(cfg, slot, lp[f"slot{j}"], xx,
+                                      positions=positions, mode=mode,
+                                      cache=c, image_embeds=image_embeds)
+            new_c[f"slot{j}"] = nc
+        return (xx, aux_sum + aux), new_c
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    lc_in = caches if caches is not None else {f"slot{j}": {} for j in range(nslots)}
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                        (seg_params, lc_in))
+    return x, new_caches, aux
+
+
+def forward(cfg: ModelConfig, params, inputs, *, mode: str,
+            positions=None, caches=None, image_embeds=None):
+    """Full decoder forward.
+
+    mode='train'/'prefill': inputs (B,S) ids or (B,S,d) embeddings.
+    mode='decode': inputs (B,1)/(B,1,d), positions (B,), caches required.
+    Returns (logits, new_caches, aux).
+    """
+    f = jnp.dtype(cfg.compute_dtype)
+    if cfg.input_mode == "embeddings" and inputs.ndim == 3:
+        x = inputs.astype(f)
+    else:
+        x = jnp.take(params["embed"], inputs, axis=0).astype(f)
+    B, S = x.shape[0], x.shape[1]
+    x = constrain(x, "batch", "seq", None)
+    if positions is None:
+        positions = jnp.arange(S)
+    if image_embeds is not None:
+        image_embeds = image_embeds.astype(f)
+
+    segs = build_segments(cfg)
+    new_caches, aux_total = [], jnp.float32(0.0)
+    for i, seg in enumerate(segs):
+        c = caches[i] if caches is not None else None
+        x, nc, aux = _run_segment(cfg, seg, params["segments"][i], x,
+                                  positions=positions, mode=mode,
+                                  caches=c, image_embeds=image_embeds)
+        new_caches.append(nc)
+        aux_total = aux_total + aux
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(f))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(f))
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, (new_caches if mode != "train" else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Public model handle
+# ---------------------------------------------------------------------------
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.specs = param_specs(cfg)
+
+    def init(self, key):
+        return init_tree(self.specs, key, jnp.dtype(self.cfg.param_dtype))
+
+    def abstract_params(self):
+        return abstract_tree(self.specs, jnp.dtype(self.cfg.param_dtype))
+
+    def param_axes(self):
+        return axes_tree(self.specs)
+
+    def __call__(self, params, inputs, **kw):
+        return forward(self.cfg, params, inputs, **kw)

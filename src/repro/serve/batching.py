@@ -1,0 +1,113 @@
+"""Continuous batching: fixed-slot decode engine with per-slot admission.
+
+Requests arrive with prompts; free slots are filled by prefilling the
+prompt (single-request prefill) and splicing its KV into the batch cache
+at the slot index; every engine step decodes all active slots at their
+own positions; finished sequences (EOS or max_tokens) retire and free
+their slot.  This is the vLLM-style serving loop reduced to its essential
+batching mechanics on top of ``serve.engine``.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import Model, init_cache
+from repro.serve.engine import greedy_sample, make_decode_step
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # (T,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 capacity: int = 128):
+        assert cfg.input_mode == "tokens", "batching driver uses token ids"
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.capacity = capacity
+        self.model = Model(cfg)
+        self.decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+        self.cache = init_cache(cfg, slots, capacity)
+        self.positions = np.zeros(slots, np.int32)
+        self.last_token = np.zeros(slots, np.int32)
+        self.active: dict = {}
+        self.queue: collections.deque = collections.deque()
+        self.finished: list = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self, slot: int, req: Request):
+        """Prefill the prompt, sample the first token from the prefill
+        logits, and splice the prompt KV into the batch cache."""
+        from repro.models.transformer import cache_specs
+        prompt = jnp.asarray(req.prompt[None, :])
+        logits, caches, _ = self.model(self.params, prompt, mode="prefill")
+        T = req.prompt.shape[0]
+        _, ax_tree = cache_specs(self.cfg, 1, T)
+        is_axes = lambda t: (isinstance(t, tuple) and
+                             all(isinstance(e, (str, type(None)))
+                                 for e in t))
+        ax_leaves = jax.tree.leaves(ax_tree, is_leaf=is_axes)
+        c_leaves, treedef = jax.tree.flatten(caches)
+        b_leaves, _ = jax.tree.flatten(self.cache)
+        out = []
+        for one_c, batch_c, axes in zip(c_leaves, b_leaves, ax_leaves):
+            if "kv_seq" in axes:
+                sa = axes.index("kv_seq")
+                pad = [(0, 0)] * one_c.ndim
+                pad[sa] = (0, self.capacity - T)
+                one_c = jnp.pad(one_c, pad)
+            idx = [slice(None)] * batch_c.ndim
+            idx[1] = slice(slot, slot + 1)
+            out.append(batch_c.at[tuple(idx)].set(one_c))
+        self.cache = jax.tree.unflatten(treedef, out)
+        first = int(np.asarray(greedy_sample(logits[0, -1:]))[0])
+        req.generated.append(first)
+        self.positions[slot] = T
+        self.last_token[slot] = first
+        self.active[slot] = req
+
+    def step(self):
+        # admissions
+        for slot in range(self.slots):
+            if slot not in self.active and self.queue:
+                self._admit(slot, self.queue.popleft())
+        if not self.active:
+            return False
+        toks = jnp.asarray(self.last_token[:, None])
+        pos = jnp.asarray(self.positions)
+        logits, self.cache = self.decode(self.params, self.cache, toks, pos)
+        nxt = np.asarray(greedy_sample(logits))
+        for slot, req in list(self.active.items()):
+            t = int(nxt[slot])
+            req.generated.append(t)
+            self.positions[slot] += 1
+            self.last_token[slot] = t
+            if (t == req.eos_id or len(req.generated) >= req.max_new_tokens
+                    or self.positions[slot] >= self.capacity - 1):
+                req.done = True
+                self.finished.append(req)
+                del self.active[slot]
+        return True
+
+    def run_to_completion(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.active or self.queue) and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

@@ -1,0 +1,82 @@
+"""AdamW with cosine schedule, global-norm clipping, and configurable
+moment dtype (f32 / bf16) for memory-constrained very-large models.
+
+States are plain pytrees with the same structure (and sharding) as the
+parameters, so FSDP/TP sharding of the optimizer comes for free (ZeRO-style
+state sharding follows the parameter sharding rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"      # "bfloat16" halves optimizer memory
+
+
+def schedule(c: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(c.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - c.warmup_steps)
+                 / jnp.maximum(c.total_steps - c.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = c.min_lr_frac + (1 - c.min_lr_frac) * cos
+    return c.lr * warm * frac
+
+
+def init(c: OptConfig, params):
+    dt = jnp.dtype(c.state_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(c: OptConfig, grads, state, params):
+    """Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+    lr = schedule(c, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, c.clip_norm / jnp.maximum(gnorm, 1e-9))
+    dt = jnp.dtype(c.state_dtype)
+    b1, b2 = c.b1, c.b2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mh, vh = m32 / c1, v32 / c2
+        step_ = mh / (jnp.sqrt(vh) + c.eps) + c.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step_
+        return newp.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

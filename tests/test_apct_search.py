@@ -1,0 +1,90 @@
+"""APCT estimator, cost model, and decomposition-space search."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model as CM
+from repro.core import search as S
+from repro.core.apct import APCT, estimate_inj
+from repro.core.counting import CountingEngine
+from repro.core.motifs import motif_patterns
+from repro.core.pattern import chain, clique
+from repro.graph.generators import erdos_renyi, triangle_rich
+
+G = triangle_rich(120, 8, seed=4)
+
+
+@pytest.fixture(scope="module")
+def apct():
+    return APCT(G, num_samples=20_000)
+
+
+def test_apct_accurate_on_frequent_patterns(apct):
+    eng = CountingEngine(G)
+    for p in [chain(3), clique(3), chain(4)]:
+        exact = eng.inj(p)
+        est = apct.query(p)
+        if exact > 100:
+            assert 0.5 * exact <= est <= 2.0 * exact, (p, est, exact)
+
+
+def test_apct_miss_insertion(apct):
+    before = apct.misses
+    p6 = motif_patterns(6)[3]
+    apct.query(p6)                        # size-6: not profiled
+    assert apct.misses == before + 1
+    apct.query(p6)                        # now cached
+    assert apct.misses == before + 1
+
+
+def test_apct_unbiased_estimator():
+    eng = CountingEngine(G)
+    exact = eng.inj(clique(3))
+    ests = [estimate_inj(G, clique(3), 40_000, seed=s) for s in range(5)]
+    assert abs(np.mean(ests) - exact) / exact < 0.25
+
+
+def test_cost_model_prefers_cheap_patterns(apct):
+    # chain counting costs more than clique counting at equal size (paper §2.4)
+    c_chain = CM.pattern_cost(chain(5), None, apct, G.n)
+    c_clique = CM.pattern_cost(clique(5), None, apct, G.n)
+    assert c_chain > c_clique
+
+
+def test_cost_model_reuse_reduces_joint_cost(apct):
+    pats = motif_patterns(4)
+    sep = sum(CM.pattern_cost(p, None, apct, G.n) for p in pats)
+    joint = CM.application_cost([(p, None) for p in pats], apct, G.n)
+    assert joint <= sep
+
+
+def test_circulant_no_worse_than_separate(apct):
+    pats = motif_patterns(4)
+    r_sep = S.separate_tuning(pats, apct, G.n)
+    r_circ = S.circulant_tuning(pats, apct, G.n)
+    assert r_circ.cost <= r_sep.cost + 1e-9
+    assert len(r_circ.cuts) == len(pats)
+
+
+def test_search_methods_return_valid_cuts(apct):
+    pats = motif_patterns(4)
+    for name, fn in S.METHODS.items():
+        r = fn(pats, apct, G.n)
+        assert len(r.cuts) == len(pats), name
+        from repro.core.decomposition import candidates
+        for p, cut in zip(pats, r.cuts):
+            assert cut in candidates(p), (name, p, cut)
+
+
+def test_automine_model_underestimates_clustered_graphs(apct):
+    """Fig 19 argument: the random-graph model misses structural locality,
+    so its clique trip-count estimate falls far below the APCT estimate on
+    a clustered graph."""
+    d = float(np.mean(G.degrees))
+    am = CM.plan_cost_automine(clique(4), tuple(range(4)), G.n, d)
+    ours = CM.plan_cost_apct(clique(4), tuple(range(4)), apct, G.n)
+    eng = CountingEngine(G)
+    exact_k4 = eng.inj(clique(4))
+    if exact_k4 > 0:
+        assert ours > am

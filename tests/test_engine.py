@@ -1,0 +1,156 @@
+"""Partial-embedding programming model: Algorithm 1, guarantees, FSM."""
+import numpy as np
+import pytest
+
+from repro.core.counting import CountingEngine, brute_force_edge_induced
+from repro.core.engine import UNDETERMINED, MiningEngine, PartialEmbedding
+from repro.core.fsm import fsm, mini_support
+from repro.core.pattern import Pattern, chain, clique, cycle, tailed_triangle
+from repro.graph.generators import erdos_renyi
+
+G = erdos_renyi(20, 3.5, seed=5)
+PATTERNS = [chain(4), cycle(4), tailed_triangle(),
+            Pattern(5, [(0, 1), (0, 2), (1, 2), (1, 3), (2, 4)])]
+
+
+@pytest.fixture(scope="module")
+def eng():
+    return MiningEngine(G)
+
+
+@pytest.mark.parametrize("p", PATTERNS)
+def test_algorithm1_totals_match_inj(eng, p):
+    """Summing UDF counts per subpattern recovers the inj tuple count."""
+    totals = {}
+    eng.run_partial_embeddings(
+        p, lambda pe, c: totals.__setitem__(
+            pe.subpattern_id, totals.get(pe.subpattern_id, 0) + c))
+    want = brute_force_edge_induced(G, p) * p.aut_order()
+    assert totals, "no partial embeddings processed"
+    for sid, tot in totals.items():
+        assert tot == want
+
+
+@pytest.mark.parametrize("p", PATTERNS)
+def test_coverage_guarantee(eng, p):
+    """Subpatterns of processed partial embeddings cover all vertices."""
+    covered = set()
+    eng.run_partial_embeddings(
+        p, lambda pe, c: covered.update(i for i, v in pe.determined))
+    assert covered == set(range(p.n))
+
+
+def test_completeness_guarantee(eng):
+    """Every embedding of the processed subpattern appears as some pe."""
+    p = chain(4)
+    seen = set()
+    eng.run_partial_embeddings(
+        p, lambda pe, c: seen.add(pe.vertices) if pe.subpattern_id == 0
+        else None)
+    # reconstruct subpattern-0 embeddings independently via counting:
+    # every pe seen must extend to >=1 embedding, and distinct pes cover
+    # distinct prefixes whose multiplicity sums to the inj count
+    assert len(seen) > 0
+    for pe in list(seen)[:20]:
+        det = [(i, v) for i, v in enumerate(pe) if v != UNDETERMINED]
+        assert len(det) >= 2
+
+
+@pytest.mark.parametrize("p", PATTERNS[:2])
+def test_materialize_matches_counts(eng, p):
+    pes = []
+    eng.run_partial_embeddings(p, lambda pe, c: pes.append((pe, c)))
+    for pe, c in pes[:25]:
+        embs = eng.materialize(p, pe, num=10_000)
+        assert len(embs) == c
+        # each materialised embedding is a valid edge-induced embedding
+        for emb in embs[:5]:
+            assert len(set(emb)) == p.n
+            for u, v in p.edges:
+                assert G.has_edge(emb[u], emb[v])
+
+
+def test_bounded_listing(eng):
+    """Fig 13: list at most N embeddings while counting everything."""
+    p = chain(4)
+    listed, total = [], [0]
+
+    def udf(pe, count):
+        if pe.subpattern_id == 0:
+            remain = 50 - len(listed)
+            if remain > 0:
+                listed.extend(eng.materialize(p, pe, min(remain, count)))
+            total[0] += count
+
+    eng.run_partial_embeddings(p, udf)
+    assert len(listed) == 50
+    assert total[0] == brute_force_edge_induced(G, p) * p.aut_order()
+
+
+def test_pattern_existence(eng):
+    assert eng.pattern_exists(chain(3))
+    assert not eng.pattern_exists(clique(6))
+
+
+def test_cost_model_falls_back_for_cliques(eng):
+    assert eng.choose_cut(clique(4)) is None
+
+
+# ---- FSM -----------------------------------------------------------------
+
+GL = erdos_renyi(36, 4.0, seed=2, num_labels=3)
+
+
+def _brute_domains(g, p):
+    """Reference MINI support via explicit embedding enumeration."""
+    from repro.core.engine import MiningEngine
+    eng = MiningEngine(g)
+    domains = [set() for _ in range(p.n)]
+    for emb in eng._enumerate(p):
+        for i, v in enumerate(emb):
+            domains[i].add(v)
+    return min((len(d) for d in domains), default=0)
+
+
+@pytest.mark.parametrize("p", [
+    Pattern(2, [(0, 1)], (0, 1)),
+    Pattern(3, [(0, 1), (1, 2)], (0, 1, 0)),
+    Pattern(3, [(0, 1), (1, 2), (0, 2)], (1, 1, 2)),
+])
+def test_mini_support_matches_bruteforce(p):
+    counter = CountingEngine(GL)
+    assert mini_support(counter, p) == _brute_domains(GL, p)
+
+
+def test_fsm_downward_closure_and_thresholds():
+    r1 = fsm(GL, min_support=2, max_vertices=3)
+    r2 = fsm(GL, min_support=6, max_vertices=3)
+    # higher threshold => subset of frequent patterns
+    assert set(r2.frequent).issubset(set(r1.frequent))
+    for p, s in r2.frequent.items():
+        assert s >= 6
+    # single-edge subpattern of any frequent 3-pattern is frequent
+    for p in r1.frequent:
+        if p.n == 3:
+            for (u, v) in p.edges:
+                e = Pattern(2, [(0, 1)],
+                            (p.labels[u], p.labels[v])).canonical()
+                assert e in r1.frequent
+
+
+def test_fsm_udf_path_matches_tensor_path():
+    """Fig 15 UDF-style domain maintenance == tensor inj_free domains."""
+    p = Pattern(3, [(0, 1), (1, 2)], (0, 1, 0))
+    eng = MiningEngine(GL)
+    domains = [set() for _ in range(p.n)]
+
+    def udf(pe, count):
+        if count > 0:
+            for i, v in pe.determined:
+                domains[i].add(v)
+
+    eng.run_partial_embeddings(p, udf)
+    counter = CountingEngine(GL)
+    for i in range(p.n):
+        tensor_dom = set(np.nonzero(counter.inj_free(p, i) > 0.5)[0].tolist())
+        assert domains[i] == tensor_dom

@@ -1,0 +1,70 @@
+"""Trip-count-aware HLO analysis: validated against cost_analysis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import hlo_parse
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_matches_cost_analysis_scan_free():
+    def f(x, w1, w2):
+        return jnp.sum(jnp.tanh((x @ w1) @ w2))
+
+    c = _compile(f, jax.ShapeDtypeStruct((32, 64), jnp.float32),
+                 jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                 jax.ShapeDtypeStruct((128, 96), jnp.float32))
+    parsed = hlo_parse.analyze_text(c.as_text(), 1)
+    cost = c.cost_analysis()["flops"]
+    assert abs(parsed.flops - cost) / cost < 0.05
+
+
+def test_scan_body_multiplied_by_trip_count():
+    L = 12
+
+    def g(x, w):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=L)
+        return h.sum()
+
+    c = _compile(g, jax.ShapeDtypeStruct((16, 32), jnp.float32),
+                 jax.ShapeDtypeStruct((32, 32), jnp.float32))
+    parsed = hlo_parse.analyze_text(c.as_text(), 1)
+    one_body = 2 * 16 * 32 * 32
+    assert parsed.flops > L * one_body * 0.9
+    raw = c.cost_analysis()["flops"]
+    assert raw < parsed.flops / 3          # cost_analysis undercounts scans
+
+
+def test_nested_scan_trip_products():
+    def h(x):
+        def outer(c, _):
+            def inner(d, _):
+                return d * 1.5 + 1.0, None
+            d, _ = jax.lax.scan(inner, c, None, length=5)
+            return d, None
+        c2, _ = jax.lax.scan(outer, x, None, length=7)
+        return c2.sum()
+
+    c = _compile(h, jax.ShapeDtypeStruct((128,), jnp.float32))
+    parsed = hlo_parse.analyze_text(c.as_text(), 1)
+    # 7*5 inner iterations, 2 flops each over 128 elems
+    assert parsed.flops >= 7 * 5 * 128 * 2 * 0.9
+
+
+def test_dtype_and_shape_parse():
+    assert hlo_parse._bytes_of("bf16[128,256]{1,0}") == 128 * 256 * 2
+    assert hlo_parse._bytes_of("(f32[8], s32[4])") == 32 + 16
+    assert hlo_parse._bytes_of("pred[10]") == 10
+
+
+def test_ring_traffic_model():
+    assert hlo_parse._ring_traffic("all-reduce", 1000, 2) == 1000
+    assert hlo_parse._ring_traffic("all-gather", 1600, 16) == 1500
+    assert hlo_parse._ring_traffic("collective-permute", 77, 4) == 77
+    assert hlo_parse._ring_traffic("reduce-scatter", 100, 4) == 300

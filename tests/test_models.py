@@ -1,0 +1,148 @@
+"""Per-architecture smoke + decode-path consistency tests (reduced configs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import reduced_config
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models.transformer import Model, init_cache, param_specs
+from repro.models.params import count_params
+from repro.serve.engine import make_decode_step, make_prefill_step
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _inputs(cfg, key, shape):
+    if cfg.input_mode == "embeddings":
+        return jax.random.normal(key, shape + (cfg.d_model,), jnp.float32)
+    return jax.random.randint(key, shape, 0, cfg.vocab_size)
+
+
+def _kw(cfg, key):
+    if cfg.family == "vlm":
+        return {"image_embeds": jax.random.normal(
+            key, (B, cfg.num_image_tokens, cfg.d_model))}
+    return {}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = reduced_config(get_config(arch))
+    model = Model(cfg)
+    params = model.init(KEY)
+    logits, _, aux = model(params, _inputs(cfg, KEY, (B, S)),
+                           mode="train", **_kw(cfg, KEY))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "mamba2-1.3b",
+                                  "jamba-1.5-large-398b",
+                                  "deepseek-v3-671b",
+                                  "llama-3.2-vision-11b"])
+def test_decode_matches_full_forward(arch):
+    """prefill(x[:T]) + decode(x[T]) logits == forward(x[:T+1])[:, T]."""
+    cfg = reduced_config(get_config(arch), remat=False)
+    model = Model(cfg)
+    params = model.init(KEY)
+    T = 23          # unique dim size so the KV seq axis is unambiguous
+    x = _inputs(cfg, KEY, (B, T + 1))
+    kw = _kw(cfg, KEY)
+    full_logits, _, _ = model(params, x, mode="train", **kw)
+
+    decode = make_decode_step(cfg)
+    # prefill over T tokens, then grow every seq-capacity axis by one slot
+    _, caches, _ = model(params, x[:, :T], mode="prefill", **kw)
+
+    def grow(c):
+        pads = [(0, 1) if d == T else (0, 0) for d in c.shape]
+        return jnp.pad(c, pads)
+
+    caches = jax.tree.map(grow, caches)
+    pos = jnp.full((B,), T, jnp.int32)
+    tok = x[:, T:T + 1]
+    logits_dec, _ = decode(params, caches, tok, pos, **kw)
+    want = np.asarray(full_logits[:, T, :], np.float32)
+    got = np.asarray(logits_dec, np.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_prefill_logits_match_forward():
+    cfg = reduced_config(get_config("qwen3-4b"), remat=False)
+    model = Model(cfg)
+    params = model.init(KEY)
+    x = _inputs(cfg, KEY, (B, S))
+    full_logits, _, _ = model(params, x, mode="train")
+    prefill = make_prefill_step(cfg)
+    last, caches = prefill(params, x)
+    np.testing.assert_allclose(np.asarray(last, np.float32),
+                               np.asarray(full_logits[:, -1], np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_matches_dense():
+    from repro.models.layers import causal_attention, flash_attention
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (2, 64, 4, 16))
+    k = jax.random.normal(k2, (2, 64, 4, 16))
+    v = jax.random.normal(k3, (2, 64, 4, 16))
+    dense = causal_attention(q, k, v, flash_block=64)
+    flash = flash_attention(q, k, v, causal=True, block=16)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ssd_chunked_matches_recurrent():
+    """Chunked SSD == step-by-step recurrence."""
+    from repro.models.ssm import ssd_chunked
+    rng = np.random.default_rng(0)
+    Bb, L, H, P, N = 2, 32, 3, 4, 8
+    xs = jnp.asarray(rng.normal(size=(Bb, L, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(Bb, L, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    B_ = jnp.asarray(rng.normal(size=(Bb, L, H, N)), jnp.float32)
+    C_ = jnp.asarray(rng.normal(size=(Bb, L, H, N)), jnp.float32)
+    y, final = ssd_chunked(xs, dt, A, B_, C_, chunk=8)
+    # reference recurrence
+    state = np.zeros((Bb, H, P, N))
+    ys = []
+    xs_n, dt_n, B_n, C_n = map(np.asarray, (xs, dt, B_, C_))
+    A_n = np.asarray(A)
+    for t in range(L):
+        dA = np.exp(dt_n[:, t] * A_n[None, :])            # (B,H)
+        state = state * dA[..., None, None] + np.einsum(
+            "bh,bhp,bhn->bhpn", dt_n[:, t], xs_n[:, t], B_n[:, t])
+        ys.append(np.einsum("bhpn,bhn->bhp", state, C_n[:, t]))
+    ref = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(final), state, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch,target_b", [
+    ("jamba-1.5-large-398b", 398.6), ("deepseek-7b", 6.9),
+    ("deepseek-v3-671b", 671.0), ("dbrx-132b", 131.6),
+    ("granite-20b", 20.0), ("qwen3-4b", 4.0), ("mamba2-1.3b", 1.3),
+])
+def test_full_config_param_counts(arch, target_b):
+    cfg = get_config(arch)
+    n = count_params(param_specs(cfg)) / 1e9
+    assert abs(n - target_b) / target_b < 0.06, (arch, n)
+    assert cfg.param_count() == count_params(param_specs(cfg))
+
+
+def test_moe_capacity_drops_overflow():
+    from repro.configs.base import MoEConfig
+    from repro.models.moe import capacity
+    assert capacity(1, 8, 256, 1.25) == 1
+    assert capacity(4096, 2, 16, 1.25) == 640
+
+
+def test_segments_cover_all_layers():
+    from repro.models.transformer import build_segments
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        segs = build_segments(cfg)
+        assert sum(len(s.slots) * s.n for s in segs) == cfg.num_layers

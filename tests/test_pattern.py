@@ -1,0 +1,100 @@
+"""Pattern machinery: canonical forms, automorphisms, motifs, quotients."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.motifs import motif_patterns
+from repro.core.pattern import (Pattern, chain, clique, cycle, pseudo_clique,
+                                star, tailed_triangle)
+from repro.core.quotient import (mobius, partitions, quotient_terms,
+                                 shrinkage_patterns)
+
+
+def test_motif_counts_match_oeis():
+    # connected graphs on n vertices: A001349
+    assert [len(motif_patterns(k)) for k in (3, 4, 5, 6)] == [2, 6, 21, 112]
+
+
+def test_aut_orders():
+    assert chain(3).aut_order() == 2
+    assert clique(3).aut_order() == 6
+    assert cycle(4).aut_order() == 8
+    assert star(5).aut_order() == 24
+    assert clique(5).aut_order() == 120
+    assert tailed_triangle().aut_order() == 2
+
+
+def test_pseudo_clique_family():
+    # k=1 (paper's PC experiments): clique plus clique-minus-one-edge
+    fam = pseudo_clique(5, 1)
+    assert len(fam) == 1                      # one iso class of K5 minus edge
+    assert all(p.m == 9 for p in fam)
+
+
+@st.composite
+def random_pattern(draw, max_n=6):
+    n = draw(st.integers(3, max_n))
+    edges = []
+    for i in range(n):
+        for j in range(i + 1, n):
+            if draw(st.booleans()):
+                edges.append((i, j))
+    p = Pattern(n, edges)
+    return p
+
+
+@given(random_pattern())
+@settings(max_examples=60, deadline=None)
+def test_canonical_invariant_under_relabel(p):
+    rng = np.random.default_rng(p._hash % (2**32))
+    perm = tuple(rng.permutation(p.n).tolist())
+    q = p.relabel(perm)
+    assert p.canonical() == q.canonical()
+
+
+@given(random_pattern(max_n=5))
+@settings(max_examples=40, deadline=None)
+def test_aut_contains_identity_and_is_group_sized(p):
+    auts = p.automorphisms()
+    assert tuple(range(p.n)) in auts
+    # closure under composition
+    a, b = auts[0], auts[-1]
+    comp = tuple(b[a[i]] for i in range(p.n))
+    assert comp in auts
+
+
+def test_partition_counts_are_bell_numbers():
+    bell = [1, 1, 2, 5, 15, 52]
+    for k in range(4):
+        assert sum(1 for _ in partitions(tuple(range(k)))) == bell[k]
+
+
+def test_mobius_singletons():
+    assert mobius([[0], [1], [2]]) == 1
+    assert mobius([[0, 1], [2]]) == -1
+    assert mobius([[0, 1, 2]]) == 2
+
+
+def test_quotient_terms_three_chain():
+    # inj(3-chain) = hom(3-chain) - hom(single-edge)   (merge endpoints)
+    terms = quotient_terms(chain(3))
+    d = {q: c for c, q in terms}
+    assert d[chain(3).canonical()] == 1
+    assert d[chain(2).canonical()] == -1
+    assert len(d) == 2
+
+
+def test_clique_has_no_cutting_set():
+    from repro.core.decomposition import cutting_sets
+    assert cutting_sets(clique(4)) == ()
+    assert len(cutting_sets(chain(4))) > 0
+
+
+def test_shrinkage_excludes_within_component():
+    # Fig 8: merging 3 and 4 (different components) produces p';
+    # merging within a component is not a shrinkage
+    p = Pattern(5, [(0, 1), (0, 2), (1, 2), (1, 3), (2, 3), (1, 4), (2, 4)])
+    shr = shrinkage_patterns(p, frozenset({0, 1, 2}))
+    assert len(shr) == 1
+    q, mult = shr[0]
+    assert q.n == 4 and mult == 1

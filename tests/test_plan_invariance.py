@@ -1,0 +1,80 @@
+"""Property: counts are invariant to the contraction plan.
+
+The decomposition (cutting set -> elimination order) may change cost by
+orders of magnitude but never the value — the system-level equivalence the
+paper's §4.4 'preserving equivalence of computation' demands.  Hypothesis
+drives random patterns x random orders x random graphs.
+"""
+import itertools
+import random
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import homomorphism as H
+from repro.core.counting import CountingEngine
+from repro.core.decomposition import candidates, cutting_sets, subpatterns
+from repro.core.pattern import Pattern, chain
+from repro.graph.generators import erdos_renyi
+
+G = erdos_renyi(48, 5.0, seed=11)
+A = jnp.asarray(G.dense_adjacency(np.float64, pad=False))
+
+
+@st.composite
+def connected_pattern(draw, max_n=5):
+    n = draw(st.integers(3, max_n))
+    edges = [(i, draw(st.integers(0, i - 1))) for i in range(1, n)]  # tree
+    for i in range(n):
+        for j in range(i + 1, n):
+            if draw(st.booleans()):
+                edges.append((i, j))
+    return Pattern(n, edges)
+
+
+@given(connected_pattern(), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_hom_invariant_to_elimination_order(p, seed):
+    rng = random.Random(seed)
+    base = float(H.hom_count(p, A))
+    order = list(range(p.n))
+    rng.shuffle(order)
+    got = float(H.hom_count(p, A, order=tuple(order)))
+    assert abs(got - base) < 1e-6 * max(1.0, abs(base))
+
+
+@given(connected_pattern(max_n=5))
+@settings(max_examples=25, deadline=None)
+def test_inj_invariant_to_cut_choice(p):
+    eng = CountingEngine(G)
+    base = eng.inj(p, cut=None)
+    for cut in list(cutting_sets(p))[:4]:
+        assert abs(eng.inj(p, cut=cut) - base) < 1e-6 * max(1.0, abs(base))
+
+
+@given(connected_pattern(max_n=5))
+@settings(max_examples=25, deadline=None)
+def test_subpatterns_cover_pattern(p):
+    """Coverage guarantee holds structurally for every cutting set."""
+    for cut in list(cutting_sets(p))[:6]:
+        subs = subpatterns(p, cut)
+        covered = set()
+        for sub, vmap in subs:
+            covered.update(vmap.keys())
+        assert covered == set(range(p.n))
+        # each subpattern = one component + the whole cut
+        for sub, vmap in subs:
+            assert set(cut) <= set(vmap)
+
+
+def test_hom_chain_equals_matrix_power():
+    """hom(k-chain) == 1ᵀ A^{k-1} 1 — exact closed form."""
+    ones = jnp.ones((A.shape[0],), A.dtype)
+    m = A
+    for k in range(3, 6):
+        m = m @ A if k > 3 else A @ A
+        want = float(ones @ (m @ ones))
+        got = float(H.hom_count(chain(k), A))
+        assert abs(got - want) < 1e-6 * max(1.0, want)

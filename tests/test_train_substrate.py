@@ -1,0 +1,161 @@
+"""Training substrate: optimizer, checkpoint/restart, fault tolerance,
+compression, data pipeline, and end-to-end loss descent."""
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import reduced_config
+from repro.configs.registry import get_config
+from repro.train import checkpoint as ckpt
+from repro.train import compression as comp
+from repro.train import optimizer as opt_mod
+from repro.train.data import TokenPipeline
+from repro.train.fault_tolerance import (PreemptionGuard, StepWatchdog,
+                                         resume_or_init)
+from repro.train.train_step import init_state, make_train_step
+
+CFG = reduced_config(get_config("qwen3-4b"), num_layers=2)
+OPT = opt_mod.OptConfig(lr=1e-2, warmup_steps=2, total_steps=50)
+
+
+def _batch(step, batch=4, seq=16):
+    pipe = TokenPipeline(CFG.vocab_size, seq, batch, seed=1)
+    return {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
+
+
+def test_loss_decreases():
+    state = init_state(CFG, OPT, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(CFG, OPT, 1))
+    losses = []
+    for i in range(25):
+        state, m = step(state, _batch(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.2, losses[::6]
+    assert np.isfinite(losses).all()
+
+
+def test_microbatching_matches_full_batch():
+    state = init_state(CFG, OPT, jax.random.PRNGKey(0))
+    b = _batch(0, batch=4)
+    s1, m1 = jax.jit(make_train_step(CFG, OPT, 1))(state, b)
+    state2 = init_state(CFG, OPT, jax.random.PRNGKey(0))
+    s2, m2 = jax.jit(make_train_step(CFG, OPT, 2))(state2, b)
+    assert abs(float(m1["ce"]) - float(m2["ce"])) < 5e-3
+    p1 = jax.tree.leaves(s1["params"])[0]
+    p2 = jax.tree.leaves(s2["params"])[0]
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2),
+                               rtol=1e-2, atol=1e-4)
+
+
+def test_optimizer_schedule():
+    c = opt_mod.OptConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(opt_mod.schedule(c, jnp.asarray(0))) == 0.0
+    assert abs(float(opt_mod.schedule(c, jnp.asarray(10))) - 1e-3) < 1e-9
+    assert float(opt_mod.schedule(c, jnp.asarray(100))) <= 1e-3 * 0.11
+
+
+def test_checkpoint_roundtrip_and_restart(tmp_path):
+    state = init_state(CFG, OPT, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(CFG, OPT, 1))
+    for i in range(3):
+        state, _ = step(state, _batch(i))
+    ckpt.save(tmp_path, 3, state)
+    like = init_state(CFG, OPT, jax.random.PRNGKey(1))
+    restored, s = ckpt.restore_latest(tmp_path, like)
+    assert s == 3
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_checkpointer_and_latest(tmp_path):
+    state = init_state(CFG, OPT, jax.random.PRNGKey(0))
+    w = ckpt.AsyncCheckpointer(tmp_path)
+    w.save(5, state)
+    w.save(10, state)     # waits for previous
+    w.wait()
+    assert ckpt.latest_step(tmp_path) == 10
+
+
+def test_crash_mid_save_keeps_previous(tmp_path):
+    state = init_state(CFG, OPT, jax.random.PRNGKey(0))
+    ckpt.save(tmp_path, 1, state)
+    # simulate a crash: a stale .tmp directory from a dead writer
+    (tmp_path / "step_2.tmp").mkdir()
+    (tmp_path / "step_2.tmp" / "arr_0.npy").write_bytes(b"garbage")
+    assert ckpt.latest_step(tmp_path) == 1
+    restored, s = ckpt.restore_latest(tmp_path, state)
+    assert s == 1
+
+
+def test_resume_or_init(tmp_path):
+    state = init_state(CFG, OPT, jax.random.PRNGKey(0))
+    got, start = resume_or_init(tmp_path, lambda: state)
+    assert start == 0
+    ckpt.save(tmp_path, 7, state)
+    got, start = resume_or_init(tmp_path, lambda: state)
+    assert start == 7
+
+
+def test_preemption_guard():
+    g = PreemptionGuard(signals=(signal.SIGUSR1,))
+    assert not g.requested
+    os.kill(os.getpid(), signal.SIGUSR1)
+    assert g.requested
+    g.restore_handlers()
+
+
+def test_step_watchdog_flags_stragglers():
+    import time
+    w = StepWatchdog(threshold_x=3.0, window=16)
+    for i in range(8):
+        w.start()
+        time.sleep(0.003)
+        w.stop(i)
+    w.start()
+    time.sleep(0.1)
+    w.stop(99)
+    assert w.straggler_events and w.straggler_events[0][0] == 99
+
+
+def test_int8_compression_error_feedback():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)}
+    r = comp.init_residuals(g)
+    approx, r = comp.compress_with_feedback(g, r, "int8")
+    rel = float(jnp.linalg.norm(approx["w"] - g["w"])
+                / jnp.linalg.norm(g["w"]))
+    assert rel < 0.02
+    # error feedback: residual carries exactly the quantisation error
+    np.testing.assert_allclose(np.asarray(r["w"]),
+                               np.asarray(g["w"] - approx["w"]), atol=1e-6)
+    # accumulated over steps, the mean of compressed grads approaches the
+    # true gradient (feedback cancels bias)
+    total = jnp.zeros_like(g["w"])
+    r = comp.init_residuals(g)
+    for _ in range(8):
+        a, r = comp.compress_with_feedback(g, r, "int8")
+        total = total + a["w"]
+    np.testing.assert_allclose(np.asarray(total / 8), np.asarray(g["w"]),
+                               atol=5e-3)
+
+
+def test_topk_compression_wire_bytes():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1024,)),
+                    jnp.float32)
+    assert comp.wire_bytes(x, "int8") < 0.3 * comp.wire_bytes(x, "none")
+    assert comp.wire_bytes(x, "topk", frac=0.01) < 0.03 * \
+        comp.wire_bytes(x, "none")
+
+
+def test_data_pipeline_deterministic_and_seekable():
+    p1 = TokenPipeline(1000, 32, 4, seed=3)
+    p2 = TokenPipeline(1000, 32, 4, seed=3)
+    b5 = p1.batch_at(5)
+    np.testing.assert_array_equal(b5["inputs"], p2.batch_at(5)["inputs"])
+    assert not np.array_equal(b5["inputs"], p1.batch_at(6)["inputs"])
+    assert b5["inputs"].shape == (4, 32)
+    np.testing.assert_array_equal(b5["labels"][:, :-1], b5["inputs"][:, 1:])
