@@ -1,0 +1,81 @@
+"""Compile-once-execute-many: the plan cache's serving-path payoff.
+
+Three regimes over the same query stream (Q repeats of one application
+pattern set):
+
+  uncached   — every query re-runs decomposition search + costing and
+               contracts with a fresh engine (the pre-compiler behaviour
+               of ``MiningEngine.choose_cut`` per query);
+  compiled   — compile the joint plan once, execute the lowered plan per
+               query (warm plan cache + warm hom memo);
+  cold-cache — one full compile per query but against a shared PlanCache,
+               so queries 2..Q deserialise the cached plan (the cross-
+               process steady state).
+
+Emits microseconds per query and the uncached/compiled speedup.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_graphs, emit, timeit
+from repro import compiler
+from repro.compiler.cache import PlanCache
+from repro.core.apct import APCT
+from repro.core.counting import CountingEngine
+from repro.core.engine import MiningEngine
+from repro.core.motifs import motif_patterns
+from repro.core.pattern import chain, tailed_triangle
+
+
+def pattern_sets(k: int):
+    return {
+        f"{k}-motif": tuple(motif_patterns(k)),
+        "chain+tail": (chain(4), chain(5), tailed_triangle()),
+    }
+
+
+def uncached_queries(g, pats, apct, q: int):
+    for _ in range(q):
+        eng = MiningEngine(g, apct=apct)      # fresh memo: no reuse
+        for p in pats:
+            eng.get_pattern_count(p, use_compiler=False)
+
+
+def compiled_queries(cp, pats, q: int):
+    for _ in range(q):
+        for p in pats:
+            cp.count(p)
+
+
+def cached_compiles(g, pats, apct, cache, q: int):
+    for _ in range(q):
+        cp = compiler.compile(pats, g, apct=apct, cache=cache)
+        for p in pats:
+            cp.count(p)
+
+
+def run(scale: str = "micro", k: int = 4, q: int = 10):
+    graphs = bench_graphs(scale)
+    for gname, g in graphs.items():
+        apct = APCT(g, num_samples=8192)
+        for sname, pats in pattern_sets(k).items():
+            dt_un, _ = timeit(uncached_queries, g, pats, apct, q)
+            emit(f"compiler/{gname}/{sname}/uncached",
+                 dt_un / q * 1e6, f"q={q}")
+
+            cache = PlanCache()
+            counter = CountingEngine(g)
+            dt_compile, cp = timeit(compiler.compile, pats, g, apct=apct,
+                                    cache=cache, counter=counter)
+            emit(f"compiler/{gname}/{sname}/compile", dt_compile * 1e6,
+                 f"nodes={len(cp.plan.nodes)}")
+            dt_c, _ = timeit(compiled_queries, cp, pats, q, warmup=True)
+            emit(f"compiler/{gname}/{sname}/compiled", dt_c / q * 1e6,
+                 f"speedup={dt_un / max(dt_c, 1e-12):.1f}x")
+
+            dt_cc, _ = timeit(cached_compiles, g, pats, apct, cache, q)
+            emit(f"compiler/{gname}/{sname}/cold-cache", dt_cc / q * 1e6,
+                 f"hits={cache.hits}")
+
+
+if __name__ == "__main__":
+    run()

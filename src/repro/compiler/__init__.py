@@ -1,0 +1,101 @@
+"""Pattern-to-plan compiler: DwarvesGraph's compilation tier.
+
+The paper's headline design is *compilation-based* graph pattern mining:
+generate candidate algorithms for every decomposition choice, cost them
+with an accurate model, and ship the best one as an executable.  This
+package is that tier, as a pipeline of five stages:
+
+    pattern set ──frontend──► candidate plan IR fragments
+                 (decomposition.candidates × homomorphism orders,
+                  CutJoin/Shrinkage decomposition joins)
+    fragments  ──costing───► winning joint plan
+                 (APCT cost model, cross-pattern CSE: shared quotient
+                  contractions scheduled once across the application)
+    plan IR    ──lowering──► jitted executables
+                 (CountingEngine einsum contractions, clique ordered
+                  enumeration, Pallas triangle kernel)
+    plan IR    ──cache─────► keyed by (canonical pattern set, graph
+                  signature): compile once, execute many
+
+``compile(patterns, graph)`` is the single entry point; it returns a
+``CompiledPlan`` whose ``.plan`` is the serializable IR (``to_json``)
+and whose ``.count(p)`` / ``.counts()`` execute it.  ``MiningEngine``,
+``launch.mine`` and ``serve.batching`` all route through here; the
+legacy direct path in ``core.counting`` remains as the fallback.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Union
+
+from repro.core.pattern import Pattern
+from repro.graph.storage import Graph
+from repro.compiler import cache as _cache_mod
+from repro.compiler import costing, frontend
+from repro.compiler.cache import PlanCache, plan_key
+from repro.compiler.ir import Plan, pattern_key
+from repro.compiler.lowering import CompiledPlan, lower
+
+__all__ = ["compile", "Plan", "PlanCache", "CompiledPlan", "pattern_key",
+           "plan_key", "default_cache"]
+
+_DEFAULT_CACHE = PlanCache()
+
+
+def default_cache() -> PlanCache:
+    """The process-wide plan cache used when ``compile(cache=None)``."""
+    return _DEFAULT_CACHE
+
+
+def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
+            apct=None, counter=None, cache: Optional[PlanCache] = None,
+            budget: int = 1 << 27, max_cutjoin_cut: int = 2,
+            use_pallas: bool = False) -> CompiledPlan:
+    """Compile a pattern (or application pattern set) for one graph.
+
+    Cache hit: deserialise the stored plan and lower it (no search).
+    Cache miss: build candidates per pattern, pick the joint winner under
+    the shared-pool cost model, store the plan, lower it.
+
+    ``cache=False`` disables caching; ``cache=None`` uses the process
+    cache.  ``apct``/``counter`` let callers (e.g. ``MiningEngine``)
+    share their profiling table and hom memo with the compiled plan.
+    """
+    if isinstance(patterns, Pattern):
+        patterns = (patterns,)
+    patterns = tuple(patterns)
+    if not patterns:
+        raise ValueError("compile() needs at least one pattern")
+
+    if counter is not None:
+        budget = counter.budget              # cost exactly what will execute
+    use_cache = cache is not False
+    if cache is None:
+        cache = _DEFAULT_CACHE
+    key = plan_key(patterns, graph)
+    if use_cache:
+        plan = cache.get(key)
+        if plan is not None:
+            return lower(plan, graph, counter=counter,
+                         use_pallas=use_pallas, from_cache=True,
+                         budget=budget)
+
+    if apct is None:
+        from repro.core.apct import APCT
+        apct = APCT(graph)
+    per_pattern = [(p, frontend.pattern_candidates(
+        p, graph_n=graph.n, budget=budget,
+        max_cutjoin_cut=max_cutjoin_cut)) for p in patterns]
+    selections, total_cost = costing.select_candidates(
+        per_pattern, apct, graph.n, budget)
+    plan = frontend.assemble(selections)
+    plan.meta.update({
+        "key": key,
+        "estimated_cost": total_cost,
+        "styles": {pattern_key(p): cand.style for p, cand in selections},
+        "cuts": {pattern_key(p): sorted(cand.cut) if cand.cut else None
+                 for p, cand in selections},
+    })
+    if use_cache:
+        cache.put(key, plan)
+    return lower(plan, graph, counter=counter, use_pallas=use_pallas,
+                 from_cache=False, budget=budget)

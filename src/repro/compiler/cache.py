@@ -1,0 +1,95 @@
+"""Plan cache: compile once, execute many.
+
+Plans are keyed by (canonical pattern-set signature, graph signature):
+the same application against the same graph — the serving steady state —
+skips decomposition search and candidate costing entirely and goes
+straight to lowering.  The cache is two-tier: a process-local dict plus
+an optional on-disk directory of canonical-JSON plan files, so warmed
+plans survive across processes (and can be shipped with a deployment).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Iterable, Optional
+
+from repro.core.pattern import Pattern
+from repro.graph.storage import Graph
+from repro.compiler.ir import Plan, pattern_key
+
+
+def graph_signature(g: Graph) -> str:
+    """Content hash of the graph (vertices, canonical edge list, labels).
+    Memoised on the instance — edges are immutable after construction —
+    so serving loops don't re-hash O(E) bytes per query."""
+    sig = getattr(g, "_plan_signature", None)
+    if sig is None:
+        h = hashlib.sha256()
+        h.update(str(g.n).encode())
+        h.update(g.edges.tobytes())
+        if g.labels is not None:
+            h.update(g.labels.tobytes())
+        sig = g._plan_signature = h.hexdigest()[:16]
+    return sig
+
+
+def patterns_signature(patterns: Iterable[Pattern]) -> str:
+    """Order-insensitive hash of the canonical pattern set."""
+    keys = sorted(pattern_key(p) for p in patterns)
+    return hashlib.sha256("|".join(keys).encode()).hexdigest()[:16]
+
+
+def plan_key(patterns: Iterable[Pattern], graph: Graph) -> str:
+    return f"{patterns_signature(patterns)}-{graph_signature(graph)}"
+
+
+class PlanCache:
+    """In-memory plan store with optional directory persistence."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._mem: dict = {}
+        self.hits = 0
+        self.misses = 0
+        if path:
+            os.makedirs(path, exist_ok=True)
+
+    def _file(self, key: str) -> str:
+        return os.path.join(self.path, f"plan-{key}.json")
+
+    def get(self, key: str) -> Optional[Plan]:
+        plan = self._mem.get(key)
+        if plan is None and self.path:
+            f = self._file(key)
+            if os.path.exists(f):
+                try:
+                    with open(f) as fh:
+                        plan = Plan.from_json(fh.read())
+                    self._mem[key] = plan
+                except (json.JSONDecodeError, KeyError, ValueError,
+                        OSError):          # corrupt entry: recompile
+                    plan = None
+        if plan is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return plan
+
+    def put(self, key: str, plan: Plan):
+        self._mem[key] = plan
+        if self.path:
+            with open(self._file(key), "w") as fh:
+                fh.write(plan.to_json())
+
+    def __contains__(self, key: str) -> bool:
+        """Peek without touching hit/miss counters."""
+        return key in self._mem or bool(
+            self.path and os.path.exists(self._file(key)))
+
+    def __len__(self):
+        return len(self._mem)
+
+    def clear(self):
+        self._mem.clear()
+        self.hits = self.misses = 0

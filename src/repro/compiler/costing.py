@@ -1,0 +1,135 @@
+"""Costing: score candidate plan fragments with the APCT model and pick
+winners under cross-pattern computation reuse.
+
+Node costs reuse the existing DwarvesGraph model (``cost_model``): every
+elimination step of a hom contraction costs the approximate count of the
+subpattern processed so far (APCT query) plus a dense-tile floor.  The
+``shared`` memo implements the paper's joint-search semantics: a node
+already scheduled by an earlier pattern costs nothing again, so the
+greedy selection naturally prefers candidates that reuse the pool —
+exactly why the paper searches the joint space (§4.3).
+
+Candidates whose contraction would materialise an intermediate beyond the
+``PlanTooWide`` threshold get infinite cost, so the compiler avoids
+emitting a plan the executor must refuse whenever a finite-cost
+candidate exists; if *no* candidate is executable the direct plan is
+kept (uncommitted, total cost inf) and the executor's ``PlanTooWide``
+triggers the caller's fallback.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+from repro.core import cost_model as CM
+from repro.core import homomorphism as H
+from repro.core.decomposition import candidates as cut_candidates
+from repro.core.pattern import Pattern, clique
+from repro.compiler.frontend import Candidate
+from repro.compiler.ir import Contract, CutJoin, Intersect, MobiusCombine, \
+    ShrinkageCorrect
+
+DENSE_TILE = CM.DENSE_TILE
+
+
+def _contract_cost(node: Contract, apct, n_vertices: int,
+                   budget: int) -> float:
+    # marker labels on free-hom patterns are not real labels: strip for
+    # the skeleton the APCT understands
+    q = Pattern(node.pattern.n, node.pattern.edges) if node.free \
+        else node.pattern
+    steps = H.frontier_sizes(q, node.order, free=node.free)
+    total = 0.0
+    done = set(node.free)
+    for v, front in steps:
+        width = len(front | set(node.free))
+        if n_vertices ** width > 4 * budget:
+            return math.inf                  # PlanTooWide at execution
+        done |= front
+        sub = q.induced(sorted(done))
+        cnt = (apct.query(sub) if sub.is_connected()
+               else CM._disc(apct, q, done))
+        floor = (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** width
+        total += cnt + floor
+    # free output tensor materialisation
+    total += (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** len(node.free)
+    return total
+
+
+def node_cost(node, apct, n_vertices: int, budget: int = 1 << 27) -> float:
+    if isinstance(node, Contract):
+        return _contract_cost(node, apct, n_vertices, budget)
+    if isinstance(node, Intersect):
+        # ordered enumeration: linear scan + one unit per (approximate)
+        # clique tuple
+        return apct.query(clique(node.k)) + n_vertices
+    if isinstance(node, CutJoin):
+        if n_vertices ** node.cut_size > 4 * budget:
+            return math.inf
+        join = (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** node.cut_size
+        return join * max(len(node.factors), 1)
+    if isinstance(node, ShrinkageCorrect):
+        return float(len(node.corrections) + 1)
+    if isinstance(node, MobiusCombine):
+        return float(len(node.terms))
+    raise TypeError(type(node))
+
+
+def candidate_cost(cand: Candidate, apct, n_vertices: int,
+                   shared: Dict[str, float], budget: int = 1 << 27) -> float:
+    """Cost of one candidate given already-scheduled nodes (cost 0)."""
+    total = 0.0
+    for node in cand.nodes:
+        if node.key in shared:
+            continue
+        total += node_cost(node, apct, n_vertices, budget)
+        if total == math.inf:
+            return math.inf
+    return total
+
+
+def commit(cand: Candidate, apct, n_vertices: int,
+           shared: Dict[str, float], budget: int = 1 << 27):
+    for node in cand.nodes:
+        if node.key not in shared:
+            shared[node.key] = node_cost(node, apct, n_vertices, budget)
+
+
+def select_candidates(per_pattern: List[Tuple[Pattern, List[Candidate]]],
+                      apct, n_vertices: int,
+                      budget: int = 1 << 27):
+    """Greedy joint selection over the application: for each pattern pick
+    the cheapest candidate under the current shared pool, then commit its
+    nodes.  Returns ([(pattern, winner)], total_cost)."""
+    shared: Dict[str, float] = {}
+    out = []
+    total = 0.0
+    for p, cands in per_pattern:
+        best, bc = None, math.inf
+        for cand in cands:
+            c = candidate_cost(cand, apct, n_vertices, shared, budget)
+            if c < bc:
+                best, bc = cand, c
+        if best is None:
+            # every candidate materialises a too-wide intermediate: keep
+            # the direct plan so the output exists, but do NOT commit its
+            # nodes (they must not look free to later patterns) — the
+            # executor will raise PlanTooWide and callers fall back
+            out.append((p, cands[0]))
+            total = math.inf
+            continue
+        commit(best, apct, n_vertices, shared, budget)
+        out.append((p, best))
+        total += bc
+    return out, total
+
+
+def choose_cut(p: Pattern, apct, n_vertices: int):
+    """Cost-model-optimal cutting set for one pattern (None = direct
+    fallback) — the compiler-side home of ``MiningEngine.choose_cut``."""
+    best, bc = None, math.inf
+    for cand in cut_candidates(p):
+        c = CM.pattern_cost(p, cand, apct, n_vertices)
+        if c < bc:
+            best, bc = cand, c
+    return best

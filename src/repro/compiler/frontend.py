@@ -1,0 +1,192 @@
+"""Frontend: pattern set -> candidate plan fragments.
+
+For every pattern the frontend materialises the same search space
+``MiningEngine.choose_cut`` walked implicitly — the direct plan plus one
+candidate per cutting set — but as explicit IR fragments whose node keys
+are canonical-pattern strings.  Assembling fragments into one ``Plan``
+CSE-merges nodes by key, so quotient contractions shared across patterns
+(the 112 6-motifs drawing from one quotient pool) appear exactly once in
+the joint plan.
+
+Two candidate styles exist per cutting set:
+
+* ``cut-order``  — the Möbius-over-quotients plan with elimination orders
+  that keep the cutting set as the separator (eliminated last);
+* ``decomposed`` — the paper's decomposition join made explicit: per
+  subpattern, a Möbius combination of free-cut-vertex hom tensors
+  (``M_i(e_c)``), joined by ``CutJoin`` over injective cut tuples and
+  corrected by ``ShrinkageCorrect`` over the shrinkage quotients.  Exact:
+      inj(p) = Σ_{e_c} Π_i M_i(e_c) − Σ_σ mult(σ)·inj(p/σ)
+  where σ ranges over cross-component merging partitions (§2.4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core import cost_model as CM
+from repro.core import homomorphism as H
+from repro.core.decomposition import cutting_sets, subpatterns
+from repro.core.pattern import Pattern
+from repro.core.quotient import (mobius, partitions, quotient_terms,
+                                 shrinkage_patterns)
+from repro.compiler.ir import (Contract, CutJoin, Intersect, MobiusCombine,
+                               Plan, ShrinkageCorrect, pattern_key)
+
+
+def _is_complete(q: Pattern) -> bool:
+    return (q.labels is None and q.n >= 3
+            and q.m == q.n * (q.n - 1) // 2)
+
+
+def _hom_node(q: Pattern, order: tuple):
+    """Contract or Intersect node for one canonical quotient."""
+    key = f"hom:{pattern_key(q)}"
+    if _is_complete(q):
+        return Intersect(key, q.n)
+    return Contract(key, q, tuple(order))
+
+
+@dataclass
+class Candidate:
+    """One way to compute a pattern's edge-induced count: a topologically
+    ordered node fragment plus the key of its output node."""
+    pattern: Pattern
+    cut: Optional[frozenset]
+    style: str                               # direct | cut-order | decomposed
+    nodes: List[object] = field(default_factory=list)
+    out_key: str = ""
+
+    def _add(self, node):
+        for have in self.nodes:
+            if have.key == node.key:
+                return node.key
+        self.nodes.append(node)
+        return node.key
+
+
+# -- Möbius-over-quotients candidates --------------------------------------------
+
+def direct_candidate(p: Pattern, cut: Optional[frozenset] = None) -> Candidate:
+    """inj(p) = Σ μ·hom(p/σ) with greedy (cut=None) or separator-last
+    elimination orders, then / |Aut|."""
+    style = "cut-order" if cut else "direct"
+    cand = Candidate(p, cut, style)
+    terms = []
+    for coeff, q in quotient_terms(p):
+        if _is_complete(q):
+            order = ()
+        elif cut:
+            order = H.plan_from_cut(q, CM._cut_image(p, cut, q))
+        else:
+            order = H.greedy_plan(q)
+        key = cand._add(_hom_node(q, order))
+        terms.append((float(coeff), key))
+    out = MobiusCombine(f"cnt:{pattern_key(p)}", tuple(terms),
+                        divisor=p.aut_order())
+    cand.out_key = cand._add(out)
+    return cand
+
+
+def _inj_terms(cand: Candidate, q: Pattern) -> str:
+    """Add an inj(q) combine (divisor 1, greedy orders) to ``cand``;
+    returns its node key."""
+    terms = []
+    for coeff, r in quotient_terms(q):
+        order = () if _is_complete(r) else H.greedy_plan(r)
+        terms.append((float(coeff), cand._add(_hom_node(r, order))))
+    return cand._add(MobiusCombine(f"inj:{pattern_key(q)}", tuple(terms),
+                                   divisor=1))
+
+
+# -- decomposition-join candidates ------------------------------------------------
+
+def _free_hom_terms(cand: Candidate, sub: Pattern,
+                    cutpos: Tuple[int, ...]) -> tuple:
+    """Möbius terms of M(e_c) for one subpattern: injective embedding
+    count of ``sub`` as a tensor over its cut vertices, expanded over the
+    partitions of V(sub) keeping cut vertices in distinct blocks."""
+    cutset = set(cutpos)
+    acc: dict = {}
+    for sigma in partitions(tuple(range(sub.n))):
+        if any(len(set(b) & cutset) > 1 for b in sigma):
+            continue                        # would pin two cut values equal
+        q, blk = sub.quotient_with_map(sigma)
+        if q is None:
+            continue                        # self-loop: zero on simple G
+        free_raw = tuple(blk[c] for c in cutpos)
+        # rank labels pin each cut axis through canonicalisation
+        lab = [0] * q.n
+        for rank, fv in enumerate(free_raw):
+            lab[fv] = rank + 1
+        ql = Pattern(q.n, q.edges, tuple(lab))
+        perm = ql.canonical_perm()
+        qc = ql.relabel(perm)
+        free_c = tuple(perm[fv] for fv in free_raw)
+        key = f"homf:{pattern_key(ql)}"
+        order = H.greedy_plan(qc, free_c)
+        node = Contract(key, qc, tuple(order), free_c)
+        if key not in acc:
+            acc[key] = [0.0, node]
+        acc[key][0] += mobius(sigma)
+    terms = []
+    for key in sorted(acc):
+        coeff, node = acc[key]
+        if coeff == 0:
+            continue
+        cand._add(node)
+        terms.append((float(coeff), key))
+    return tuple(terms)
+
+
+def decomposed_candidate(p: Pattern, cut: frozenset, *, graph_n: int,
+                         budget: int = 1 << 27,
+                         max_cut: int = 2) -> Optional[Candidate]:
+    """CutJoin/ShrinkageCorrect plan for one cutting set, or None when
+    ineligible (labelled pattern, wide cut, or cut tensor over budget)."""
+    k = len(cut)
+    if p.labels is not None or k > max_cut or graph_n ** k > budget:
+        return None
+    cand = Candidate(p, cut, "decomposed")
+    factors = []
+    for sub, vmap in subpatterns(p, cut):
+        cutpos = tuple(vmap[c] for c in sorted(cut))
+        terms = _free_hom_terms(cand, sub, cutpos)
+        if not terms:
+            return None
+        factors.append(terms)
+    cut_sig = "-".join(map(str, sorted(cut)))
+    join = CutJoin(f"cutjoin:{pattern_key(p)}:{cut_sig}", k, tuple(factors))
+    join_key = cand._add(join)
+    corrections = []
+    for q, mult in shrinkage_patterns(p, cut):
+        corrections.append((float(mult), _inj_terms(cand, q)))
+    out = ShrinkageCorrect(f"cnt:{pattern_key(p)}:{cut_sig}", join_key,
+                           tuple(corrections), divisor=p.aut_order())
+    cand.out_key = cand._add(out)
+    return cand
+
+
+# -- search space / assembly ------------------------------------------------------
+
+def pattern_candidates(p: Pattern, *, graph_n: int, budget: int = 1 << 27,
+                       max_cutjoin_cut: int = 2) -> List[Candidate]:
+    """The full candidate space for one pattern, direct plan first."""
+    out = [direct_candidate(p)]
+    for cut in cutting_sets(p):
+        out.append(direct_candidate(p, cut))
+        dec = decomposed_candidate(p, cut, graph_n=graph_n, budget=budget,
+                                   max_cut=max_cutjoin_cut)
+        if dec is not None:
+            out.append(dec)
+    return out
+
+
+def assemble(selections) -> Plan:
+    """[(pattern, Candidate)] -> one joint Plan; nodes CSE-merge by key."""
+    plan = Plan()
+    for p, cand in selections:
+        for node in cand.nodes:
+            plan.add(node)
+        plan.set_output(p, cand.out_key)
+    return plan

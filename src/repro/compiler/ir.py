@@ -1,0 +1,245 @@
+"""Execution-plan IR: the compiler's explicit, serializable middle layer.
+
+A plan is a DAG of typed ops keyed by canonical-pattern strings.  Node
+keys double as the cross-pattern CSE namespace: two patterns whose
+expansions need the same quotient contraction reference the *same*
+``Contract`` node (the tensorised form of the paper's shared quotient
+pool), so the joint plan for an application pays each contraction once.
+
+Ops
+---
+``Contract``          bucket-elimination hom contraction of one quotient
+                      pattern under an explicit vertex order; with ``free``
+                      vertices it yields a tensor over graph vertices
+                      (used by the decomposed path's per-subpattern counts).
+``Intersect``         the ordered-enumeration / set-intersection route for
+                      complete patterns (cliques have no cutting set,
+                      paper §2.4); lowers to degeneracy-ordered
+                      intersections or the Pallas triangle kernel.
+``MobiusCombine``     Σ coeff · hom(quotient) over the partition lattice
+                      (inj when divisor == 1, embedding count when
+                      divisor == |Aut|).
+``CutJoin``           the decomposition join: Σ_{e_c injective}
+                      Π_i M_i(e_c), where each M_i is a Möbius combination
+                      of free-vertex ``Contract`` tensors — one factor per
+                      subpattern of the chosen cutting set.
+``ShrinkageCorrect``  subtracts shrinkage-pattern counts (cross-component
+                      vertex collisions, paper §2.4) from a ``CutJoin``
+                      value and divides by |Aut|: the decomposed form of
+                      an edge-induced embedding count.
+
+Every op is a frozen dataclass with a ``to_dict``/``from_dict`` pair;
+``Plan`` serialises to canonical JSON so cached plans survive processes.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core.pattern import Pattern
+
+Term = Tuple[float, str]                    # (coefficient, node key)
+
+
+# -- pattern (de)serialisation ---------------------------------------------------
+
+def pattern_key(p: Pattern) -> str:
+    """Stable string key of the canonical form (the CSE identity)."""
+    c = p.canonical()
+    bits, labels = c._code()
+    lab = "" if not labels else ":" + ",".join(map(str, labels))
+    return f"{c.n}.{bits}{lab}"
+
+
+def pattern_to_dict(p: Pattern) -> dict:
+    d = {"n": p.n, "edges": sorted(list(e) for e in p.edges)}
+    if p.labels is not None:
+        d["labels"] = list(p.labels)
+    return d
+
+
+def pattern_from_dict(d: dict) -> Pattern:
+    return Pattern(d["n"], [tuple(e) for e in d["edges"]],
+                   tuple(d["labels"]) if d.get("labels") is not None else None)
+
+
+# -- ops -------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Contract:
+    """hom(pattern) by bucket elimination along ``order``.  Non-empty
+    ``free`` keeps those vertices as output axes (axis order = tuple
+    order); the pattern's labels are then rank markers pinning the
+    canonical form, not real vertex labels."""
+    key: str
+    pattern: Pattern
+    order: Tuple[int, ...]
+    free: Tuple[int, ...] = ()
+
+    def refs(self):
+        return ()
+
+    def to_dict(self) -> dict:
+        return {"op": "contract", "key": self.key,
+                "pattern": pattern_to_dict(self.pattern),
+                "order": list(self.order), "free": list(self.free)}
+
+
+@dataclass(frozen=True)
+class Intersect:
+    """hom(K_k) = k! · (# k-cliques) via ordered enumeration."""
+    key: str
+    k: int
+
+    def refs(self):
+        return ()
+
+    def to_dict(self) -> dict:
+        return {"op": "intersect", "key": self.key, "k": self.k}
+
+
+@dataclass(frozen=True)
+class MobiusCombine:
+    """(Σ coeff · value(ref)) / divisor."""
+    key: str
+    terms: Tuple[Term, ...]
+    divisor: int = 1
+
+    def refs(self):
+        return tuple(r for _, r in self.terms)
+
+    def to_dict(self) -> dict:
+        return {"op": "mobius", "key": self.key,
+                "terms": [[c, r] for c, r in self.terms],
+                "divisor": self.divisor}
+
+
+@dataclass(frozen=True)
+class CutJoin:
+    """Σ over injective cut tuples of Π_i M_i, with M_i = Σ coeff ·
+    tensor(ref) (each ref a free-vertex Contract).  ``cut_size`` axes of
+    each factor tensor are aligned by cut rank."""
+    key: str
+    cut_size: int
+    factors: Tuple[Tuple[Term, ...], ...]
+
+    def refs(self):
+        return tuple(r for f in self.factors for _, r in f)
+
+    def to_dict(self) -> dict:
+        return {"op": "cutjoin", "key": self.key, "cut_size": self.cut_size,
+                "factors": [[[c, r] for c, r in f] for f in self.factors]}
+
+
+@dataclass(frozen=True)
+class ShrinkageCorrect:
+    """(value(base) − Σ mult · value(ref)) / divisor — the decomposed
+    count after removing cross-component collision (shrinkage) terms."""
+    key: str
+    base: str
+    corrections: Tuple[Term, ...]
+    divisor: int = 1
+
+    def refs(self):
+        return (self.base,) + tuple(r for _, r in self.corrections)
+
+    def to_dict(self) -> dict:
+        return {"op": "shrinkage", "key": self.key, "base": self.base,
+                "corrections": [[m, r] for m, r in self.corrections],
+                "divisor": self.divisor}
+
+
+_OPS = {"contract": Contract, "intersect": Intersect, "mobius": MobiusCombine,
+        "cutjoin": CutJoin, "shrinkage": ShrinkageCorrect}
+
+
+def op_from_dict(d: dict):
+    kind = d["op"]
+    if kind == "contract":
+        return Contract(d["key"], pattern_from_dict(d["pattern"]),
+                        tuple(d["order"]), tuple(d["free"]))
+    if kind == "intersect":
+        return Intersect(d["key"], d["k"])
+    if kind == "mobius":
+        return MobiusCombine(d["key"],
+                             tuple((c, r) for c, r in d["terms"]),
+                             d["divisor"])
+    if kind == "cutjoin":
+        return CutJoin(d["key"], d["cut_size"],
+                       tuple(tuple((c, r) for c, r in f)
+                             for f in d["factors"]))
+    if kind == "shrinkage":
+        return ShrinkageCorrect(d["key"], d["base"],
+                                tuple((m, r) for m, r in d["corrections"]),
+                                d["divisor"])
+    raise ValueError(f"unknown op kind {kind!r}")
+
+
+# -- the plan --------------------------------------------------------------------
+
+@dataclass
+class Plan:
+    """A compiled application: op DAG + one output node per pattern."""
+    nodes: Dict[str, object] = field(default_factory=dict)
+    outputs: Dict[str, str] = field(default_factory=dict)   # pattern_key -> node
+    meta: dict = field(default_factory=dict)
+
+    def add(self, node) -> str:
+        """Insert (or CSE-merge) a node; returns its key.
+
+        Merging is first-wins by key: two candidates may carry the same
+        quotient contraction with different elimination orders, and the
+        first-committed order is the one that executes.  Values are
+        order-invariant (plan invariance), and the cost model's shared
+        pool charges exactly the committed node, so this matches the
+        paper's reuse semantics."""
+        have = self.nodes.get(node.key)
+        if have is not None:
+            return node.key
+        for r in node.refs():
+            if r not in self.nodes:
+                raise KeyError(f"node {node.key!r} references missing {r!r}")
+        self.nodes[node.key] = node
+        return node.key
+
+    def set_output(self, p: Pattern, node_key: str):
+        if node_key not in self.nodes:
+            raise KeyError(node_key)
+        self.outputs[pattern_key(p)] = node_key
+
+    def output_for(self, p: Pattern) -> str:
+        return self.outputs[pattern_key(p)]
+
+    def op_counts(self) -> dict:
+        out: dict = {}
+        for node in self.nodes.values():
+            name = type(node).__name__
+            out[name] = out.get(name, 0) + 1
+        return out
+
+    # -- serialisation -----------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {"nodes": [n.to_dict() for n in self.nodes.values()],
+                "outputs": dict(self.outputs), "meta": dict(self.meta)}
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Plan":
+        plan = cls(meta=dict(d.get("meta", {})))
+        for nd in d["nodes"]:
+            plan.add(op_from_dict(nd))
+        for pk, nk in d["outputs"].items():
+            if nk not in plan.nodes:
+                raise KeyError(nk)
+            plan.outputs[pk] = nk
+        return plan
+
+    @classmethod
+    def from_json(cls, s: str) -> "Plan":
+        return cls.from_dict(json.loads(s))
+
+    def __eq__(self, other):
+        return isinstance(other, Plan) and self.to_dict() == other.to_dict()

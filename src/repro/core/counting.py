@@ -49,6 +49,7 @@ class CountingEngine:
                 np.float64 if use_x64 else np.float32, pad=False))
                 if graph.labels is not None else None)
         self.hom_memo: dict = {}
+        self.hom_free_memo: dict = {}
         self.stats = {"hom_evals": 0, "hom_hits": 0}
 
     # -- hom ------------------------------------------------------------------
@@ -76,6 +77,26 @@ class CountingEngine:
                                         unary=self._unary_for(c),
                                         budget=self.budget))
         self.hom_memo[c] = val
+        return val
+
+    def hom_free_tensor(self, p: Pattern, free: tuple,
+                        order=None) -> np.ndarray:
+        """hom(p) with ``free`` pattern vertices kept as output axes —
+        a (N,)*len(free) tensor over graph vertices.  The compiler's
+        ``Contract`` primitive for decomposition joins (per-subpattern
+        extension counts as a function of the cut tuple).  Memoised by
+        (pattern, free) in caller-canonical form."""
+        key = (p, tuple(free))
+        if key in self.hom_free_memo:
+            self.stats["hom_hits"] += 1
+            return self.hom_free_memo[key]
+        self.stats["hom_evals"] += 1
+        with self._x64():
+            val = np.asarray(H.hom_count(
+                p, self.A, order=tuple(order) if order else None,
+                free=tuple(free), unary=self._unary_for(p),
+                budget=self.budget))
+        self.hom_free_memo[key] = val
         return val
 
     # -- injective tuples / embeddings ----------------------------------------

@@ -25,10 +25,9 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core import cost_model as CM
 from repro.core.apct import APCT
 from repro.core.counting import CountingEngine
-from repro.core.decomposition import candidates, cutting_sets, subpatterns
+from repro.core.decomposition import cutting_sets, subpatterns
 from repro.core.pattern import Pattern
 from repro.core.quotient import shrinkage_patterns
 from repro.graph.storage import Graph
@@ -56,21 +55,36 @@ class MiningEngine:
         self.graph = graph
         self.counter = CountingEngine(graph, budget=budget)
         self.apct = apct or APCT(graph)
+        self._compiled: dict = {}           # canonical pattern -> CompiledPlan
+        self.compiler_fallbacks = 0
 
     # -- decomposition choice -------------------------------------------------
     def choose_cut(self, p: Pattern):
         """Cost-model-optimal cutting set (None = direct fallback, the
-        paper's degeneration guard)."""
-        best, bc = None, math.inf
-        for cand in candidates(p):
-            c = CM.pattern_cost(p, cand, self.apct, self.graph.n)
-            if c < bc:
-                best, bc = cand, c
-        return best
+        paper's degeneration guard).  Delegates to the compiler's costing
+        stage — one search implementation for engine and compiler."""
+        from repro.compiler import costing
+        return costing.choose_cut(p, self.apct, self.graph.n)
 
     # -- fast paths -------------------------------------------------------------
     def get_pattern_count(self, p: Pattern, induced: str = "edge",
-                          cut="auto") -> float:
+                          cut="auto", use_compiler: bool = True) -> float:
+        """Edge/vertex-induced count.  The edge-induced path goes through
+        ``compiler.compile`` (plan IR + plan cache, so repeated queries
+        skip decomposition search); the legacy direct contraction remains
+        the fallback (``use_compiler=False``, explicit cuts, or any
+        compile/execute failure)."""
+        if induced == "edge" and use_compiler and cut == "auto":
+            try:
+                from repro import compiler
+                cp = self._compiled.get(p.canonical())
+                if cp is None:
+                    cp = compiler.compile((p,), self.graph, apct=self.apct,
+                                          counter=self.counter)
+                    self._compiled[p.canonical()] = cp
+                return cp.count(p)
+            except Exception:
+                self.compiler_fallbacks += 1    # legacy path takes over
         if cut == "auto":
             cut = self.choose_cut(p)
         if induced == "edge":
@@ -196,9 +210,9 @@ class MiningEngine:
                     cands &= set(g.neighbors(assign[u]))
             else:
                 cands = range(g.n)
+            used = {assign[order[j]] for j in range(i)}
             for x in cands:
-                if x in assign[:0] or x in [assign[order[j]]
-                                            for j in range(i)]:
+                if x in used:
                     continue
                 if g.labels is not None and p.labels is not None and \
                         g.labels[x] != p.labels[v]:

@@ -23,7 +23,9 @@ def _popcount32(v):
 
 def _kernel(a_ref, b_ref, out_ref):
     x = a_ref[...] & b_ref[...]
-    out_ref[...] = jnp.sum(_popcount32(x), axis=1, keepdims=True)
+    # popcount stays uint32; the output ref is int32
+    out_ref[...] = jnp.sum(_popcount32(x).astype(jnp.int32),
+                           axis=1, keepdims=True)
 
 
 def bitset_intersect(rows_a, rows_b, *, block: int = 256,

@@ -4,6 +4,11 @@
   PYTHONPATH=src python -m repro.launch.mine --app fsm --support 100
   PYTHONPATH=src python -m repro.launch.mine --app chain --k 7
   PYTHONPATH=src python -m repro.launch.mine --app pc --k 7
+
+Counting apps compile the whole pattern set jointly through
+``repro.compiler`` (one plan, shared quotient contractions, plan cache);
+``--no-compiler`` keeps the legacy per-pattern engine path, and
+``--plan-cache DIR`` persists compiled plans across runs.
 """
 from __future__ import annotations
 
@@ -12,7 +17,7 @@ import time
 
 import numpy as np
 
-from repro.core.counting import CountingEngine
+from repro.core.counting import CountingEngine, solve_overlay
 from repro.core.engine import MiningEngine
 from repro.core.fsm import fsm
 from repro.core.motifs import motif_patterns
@@ -47,6 +52,10 @@ def main(argv=None):
     ap.add_argument("--labels", type=int, default=0)
     ap.add_argument("--support", type=int, default=100)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-compiler", action="store_true",
+                    help="legacy per-pattern engine path (no plan IR)")
+    ap.add_argument("--plan-cache", default=None, metavar="DIR",
+                    help="persist compiled plans in DIR across runs")
     args = ap.parse_args(argv)
 
     if args.app == "fsm" and args.labels == 0:
@@ -55,16 +64,38 @@ def main(argv=None):
     print(f"graph: {g}")
     t0 = time.time()
 
+    plan_cache = None
+    if args.plan_cache:
+        from repro.compiler import PlanCache
+        plan_cache = PlanCache(args.plan_cache)
+
     if args.app == "motif":
-        eng = MiningEngine(g)
-        cuts = {p: eng.choose_cut(p) for p in motif_patterns(args.k)}
-        table = eng.counter.motif_table(args.k, cuts=cuts)
+        pats = motif_patterns(args.k)
+        if args.no_compiler:
+            eng = MiningEngine(g)
+            cuts = {p: eng.choose_cut(p) for p in pats}
+            table = eng.counter.motif_table(args.k, cuts=cuts)
+        else:
+            from repro import compiler
+            cp = compiler.compile(pats, g, cache=plan_cache)
+            t_compile = time.time() - t0
+            e = {p: cp.count(p) for p in pats}
+            table = solve_overlay(args.k, e)
+            print(f"  compiled {len(pats)} patterns -> "
+                  f"{len(cp.plan.nodes)} plan nodes "
+                  f"({'cache hit' if cp.from_cache else 'cache miss'}, "
+                  f"{t_compile:.2f}s)")
         for p, v in sorted(table.items(), key=lambda t: t[0].m):
             print(f"  {args.k}-motif m={p.m:2d} {sorted(p.edges)}: "
                   f"{v:,.0f}")
     elif args.app == "chain":
-        eng = MiningEngine(g)
-        c = eng.get_pattern_count(chain(args.k))
+        if args.no_compiler:
+            eng = MiningEngine(g)
+            c = eng.get_pattern_count(chain(args.k), use_compiler=False)
+        else:
+            from repro import compiler
+            cp = compiler.compile(chain(args.k), g, cache=plan_cache)
+            c = cp.count(chain(args.k))
         print(f"  {args.k}-chain (edge-induced): {c:,.0f}")
     elif args.app == "pc":
         from repro.core.cliques import pseudo_clique_count

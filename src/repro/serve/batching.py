@@ -6,6 +6,12 @@ at the slot index; every engine step decodes all active slots at their
 own positions; finished sequences (EOS or max_tokens) retire and free
 their slot.  This is the vLLM-style serving loop reduced to its essential
 batching mechanics on top of ``serve.engine``.
+
+``PatternQueryBatcher`` is the graph-mining counterpart: pattern-count
+requests against one graph are drained in batches, grouped by canonical
+pattern set, and served through ``repro.compiler`` — the first query of
+a pattern set pays compilation (candidate search + costing), every later
+query hits the plan cache and goes straight to the lowered executable.
 """
 from __future__ import annotations
 
@@ -108,6 +114,80 @@ class ContinuousBatcher:
     def run_to_completion(self, max_steps: int = 10_000):
         steps = 0
         while (self.active or self.queue) and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps
+
+
+# -- graph-mining query serving ---------------------------------------------------
+
+@dataclass
+class PatternRequest:
+    """One mining query: count every pattern of ``patterns`` in the
+    batcher's graph (edge-induced)."""
+    uid: int
+    patterns: tuple
+    counts: dict = field(default_factory=dict)
+    from_cache: bool = False
+    done: bool = False
+
+
+class PatternQueryBatcher:
+    """Compile-once-execute-many serving loop for pattern counts.
+
+    Queued requests are drained up to ``max_batch`` per step and grouped
+    by canonical pattern-set signature; each group compiles (or cache-
+    hits) one joint plan and executes it for every request in the group.
+    A shared ``CountingEngine`` keeps the hom memo warm across plans, so
+    even distinct pattern sets reuse overlapping quotient contractions.
+    """
+
+    def __init__(self, graph, *, cache=None, apct=None, max_batch: int = 8):
+        from repro.compiler import PlanCache
+        from repro.core.counting import CountingEngine
+        self.graph = graph
+        self.cache = cache if cache is not None else PlanCache()
+        self.apct = apct
+        self.max_batch = max_batch
+        self.counter = CountingEngine(graph)
+        self.queue: collections.deque = collections.deque()
+        self.finished: list = []
+        self.stats = {"steps": 0, "compiles": 0, "cache_hits": 0}
+
+    def submit(self, req: PatternRequest):
+        self.queue.append(req)
+
+    def step(self) -> bool:
+        from repro import compiler
+        from repro.compiler.cache import patterns_signature
+        if not self.queue:
+            return False
+        batch = [self.queue.popleft()
+                 for _ in range(min(self.max_batch, len(self.queue)))]
+        groups: dict = {}
+        for req in batch:
+            groups.setdefault(patterns_signature(req.patterns),
+                              []).append(req)
+        for reqs in groups.values():
+            key = compiler.plan_key(reqs[0].patterns, self.graph)
+            if key not in self.cache and self.apct is None:
+                from repro.core.apct import APCT
+                self.apct = APCT(self.graph)   # one profile, all compiles
+            cp = compiler.compile(reqs[0].patterns, self.graph,
+                                  apct=self.apct, counter=self.counter,
+                                  cache=self.cache)
+            self.stats["cache_hits" if cp.from_cache else "compiles"] += 1
+            for req in reqs:
+                req.counts = {p: cp.count(p) for p in req.patterns}
+                req.from_cache = cp.from_cache
+                req.done = True
+                self.finished.append(req)
+        self.stats["steps"] += 1
+        return True
+
+    def run_to_completion(self, max_steps: int = 10_000) -> int:
+        steps = 0
+        while self.queue and steps < max_steps:
             self.step()
             steps += 1
         return steps

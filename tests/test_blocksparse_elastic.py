@@ -82,8 +82,8 @@ def test_elastic_reshard_to_new_mesh(tmp_path):
         # restore onto a (4,2) mesh, then onto a (2,4) mesh — the elastic
         # path re-slices the same logical shardings
         for shp in ((4, 2), (2, 4)):
-            mesh = jax.make_mesh(shp, ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,)*2)
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh(shp, ("data", "model"))
             restored = elastic_reshard(r"{tmp_path}", 5, state,
                                        state_axes(cfg), mesh)
             a = jax.tree.leaves(restored)[0]

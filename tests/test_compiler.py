@@ -1,0 +1,243 @@
+"""Compiler subsystem: golden plan IR, plan cache, compiled-vs-engine
+equivalence, decomposition-join exactness, serving batcher."""
+import numpy as np
+import pytest
+
+from repro import compiler
+from repro.compiler import costing, frontend, lowering
+from repro.compiler.cache import PlanCache, graph_signature, plan_key
+from repro.compiler.ir import (Contract, CutJoin, Intersect, MobiusCombine,
+                               Plan, ShrinkageCorrect, pattern_key)
+from repro.core.counting import CountingEngine, brute_force_edge_induced
+from repro.core.decomposition import cutting_sets
+from repro.core.engine import MiningEngine
+from repro.core.pattern import Pattern, chain, clique, cycle, tailed_triangle
+from repro.graph.generators import erdos_renyi, triangle_rich
+
+HOUSE = Pattern(5, [(0, 1), (1, 2), (2, 3), (3, 0), (0, 4), (1, 4)])
+
+G = erdos_renyi(24, 4.0, seed=1)
+
+
+@pytest.fixture(scope="module")
+def eng():
+    return CountingEngine(G)
+
+
+# -- golden plan IR ---------------------------------------------------------------
+
+def test_golden_plan_triangle():
+    """K3: every nontrivial quotient has a self-loop, so the plan is one
+    Intersect (the clique route) combined with divisor |Aut| = 6."""
+    cand = frontend.direct_candidate(clique(3))
+    plan = frontend.assemble([(clique(3), cand)])
+    assert plan.op_counts() == {"Intersect": 1, "MobiusCombine": 1}
+    out = plan.nodes[plan.output_for(clique(3))]
+    assert isinstance(out, MobiusCombine)
+    assert out.divisor == 6
+    assert out.terms == ((1.0, f"hom:{pattern_key(clique(3))}"),)
+    assert isinstance(plan.nodes[out.terms[0][1]], Intersect)
+    assert plan.nodes[out.terms[0][1]].k == 3
+
+
+def test_golden_plan_4clique():
+    cand = frontend.direct_candidate(clique(4))
+    plan = frontend.assemble([(clique(4), cand)])
+    assert plan.op_counts() == {"Intersect": 1, "MobiusCombine": 1}
+    out = plan.nodes[plan.output_for(clique(4))]
+    assert out.divisor == 24                       # |Aut(K4)|
+
+
+def test_golden_plan_house():
+    """House pattern: one Contract per canonical quotient of the Möbius
+    expansion, triangle quotients routed to Intersect."""
+    from repro.core.quotient import quotient_terms
+    cand = frontend.direct_candidate(HOUSE)
+    plan = frontend.assemble([(HOUSE, cand)])
+    terms = quotient_terms(HOUSE)
+    homs = [k for k in plan.nodes if k.startswith("hom:")]
+    assert len(homs) == len(terms)
+    out = plan.nodes[plan.output_for(HOUSE)]
+    assert out.divisor == HOUSE.aut_order() == 2
+    got = {ref: coeff for coeff, ref in out.terms}
+    for coeff, q in terms:
+        assert got[f"hom:{pattern_key(q)}"] == coeff
+
+
+def test_golden_decomposed_tailed_triangle():
+    """Tailed triangle with cut {2}: two subpatterns (triangle + edge),
+    one shrinkage quotient, CutJoin over a size-1 cut."""
+    p = tailed_triangle()
+    cand = frontend.decomposed_candidate(p, frozenset({2}), graph_n=G.n)
+    assert cand is not None and cand.style == "decomposed"
+    plan = frontend.assemble([(p, cand)])
+    ops = plan.op_counts()
+    assert ops["CutJoin"] == 1 and ops["ShrinkageCorrect"] == 1
+    join = next(n for n in plan.nodes.values() if isinstance(n, CutJoin))
+    assert join.cut_size == 1
+    assert len(join.factors) == 2                  # one M_i per subpattern
+    out = plan.nodes[plan.output_for(p)]
+    assert isinstance(out, ShrinkageCorrect)
+    assert out.divisor == p.aut_order()
+    assert len(out.corrections) >= 1               # triangle shrinkage
+
+
+def test_plan_serialization_roundtrip():
+    pats = [clique(3), clique(4), HOUSE, tailed_triangle(), chain(4)]
+    cp = compiler.compile(pats, G, cache=False)
+    rt = Plan.from_json(cp.plan.to_json())
+    assert rt == cp.plan
+    # the deserialised plan lowers and executes identically
+    cp2 = lowering.lower(rt, G)
+    for p in pats:
+        assert cp2.count(p) == cp.count(p)
+
+
+# -- cross-pattern CSE ------------------------------------------------------------
+
+def test_cross_pattern_cse_shares_quotients():
+    """Joint plan of several patterns is strictly smaller than the sum of
+    their individual plans (shared quotient contractions appear once)."""
+    pats = [chain(4), chain(5), cycle(4), tailed_triangle(), HOUSE]
+    joint = compiler.compile(pats, G, cache=False).plan
+    separate = sum(
+        len(compiler.compile((p,), G, cache=False).plan.nodes)
+        for p in pats)
+    assert len(joint.nodes) < separate
+    # chain(3) is a quotient of several of these patterns: exactly one node
+    key = f"hom:{pattern_key(chain(3))}"
+    assert sum(1 for k in joint.nodes if k == key) == 1
+
+
+# -- plan cache -------------------------------------------------------------------
+
+def test_plan_cache_hit_miss():
+    cache = PlanCache()
+    pats = (chain(4), cycle(4))
+    cp1 = compiler.compile(pats, G, cache=cache)
+    assert not cp1.from_cache
+    assert (cache.hits, cache.misses) == (0, 1)
+    cp2 = compiler.compile(pats, G, cache=cache)
+    assert cp2.from_cache
+    assert (cache.hits, cache.misses) == (1, 1)
+    assert cp2.plan == cp1.plan
+    # different pattern set or different graph: miss
+    assert plan_key(pats, G) != plan_key((chain(4),), G)
+    g2 = erdos_renyi(24, 4.0, seed=2)
+    assert graph_signature(G) != graph_signature(g2)
+    cp3 = compiler.compile(pats, g2, cache=cache)
+    assert not cp3.from_cache
+
+
+def test_plan_cache_on_disk(tmp_path):
+    cache = PlanCache(str(tmp_path))
+    pats = (tailed_triangle(),)
+    compiler.compile(pats, G, cache=cache)
+    # a fresh cache instance over the same directory hits via disk
+    cache2 = PlanCache(str(tmp_path))
+    assert plan_key(pats, G) in cache2
+    cp = compiler.compile(pats, G, cache=cache2)
+    assert cp.from_cache
+    assert cp.count(tailed_triangle()) == \
+        brute_force_edge_induced(G, tailed_triangle())
+
+
+# -- equivalence ------------------------------------------------------------------
+
+EQ_PATTERNS = [chain(3), clique(3), chain(4), cycle(4), clique(4),
+               tailed_triangle(), HOUSE, chain(5),
+               Pattern(5, [(0, 1), (0, 2), (1, 2), (1, 3), (2, 4)])]
+
+
+@pytest.mark.parametrize("gi,g", enumerate(
+    [G, triangle_rich(26, 4, seed=3), erdos_renyi(30, 5.0, seed=7)]))
+def test_compiled_counts_match_engine(gi, g):
+    eng = CountingEngine(g)
+    cp = compiler.compile(EQ_PATTERNS, g, cache=False, counter=eng)
+    for p in EQ_PATTERNS:
+        assert abs(cp.count(p) - eng.edge_induced(p)) < 1e-6, p
+
+
+def test_compiled_counts_match_brute_force(eng):
+    cp = compiler.compile(EQ_PATTERNS, G, cache=False)
+    for p in EQ_PATTERNS:
+        assert cp.count(p) == brute_force_edge_induced(G, p), p
+
+
+@pytest.mark.parametrize("p", EQ_PATTERNS)
+def test_every_decomposed_candidate_exact(eng, p):
+    """CutJoin/ShrinkageCorrect plans are exact for *every* cutting set,
+    not just the cost-model winner (plan invariance for the compiler)."""
+    want = brute_force_edge_induced(G, p)
+    for cut in cutting_sets(p):
+        cand = frontend.decomposed_candidate(p, cut, graph_n=G.n)
+        if cand is None:
+            continue
+        plan = frontend.assemble([(p, cand)])
+        got = lowering.lower(plan, G, counter=eng).count(p)
+        assert abs(got - want) < 1e-6, (p, sorted(cut))
+
+
+def test_engine_path_through_compiler(eng):
+    m = MiningEngine(G)
+    for p in (chain(4), HOUSE):
+        got = m.get_pattern_count(p)
+        assert got == brute_force_edge_induced(G, p)
+        legacy = m.get_pattern_count(p, use_compiler=False)
+        assert got == legacy
+    # the compiler path actually ran (no silent fallback) and repeat
+    # queries reuse the lowered plan
+    assert m.compiler_fallbacks == 0
+    assert len(m._compiled) == 2
+    m.get_pattern_count(chain(4))
+    assert len(m._compiled) == 2
+
+
+# -- costing ----------------------------------------------------------------------
+
+def test_costing_never_selects_too_wide(eng):
+    """Candidate selection must skip plans the executor would refuse."""
+    from repro.core.apct import APCT
+    apct = APCT(G, num_samples=1024)
+    cands = frontend.pattern_candidates(chain(5), graph_n=G.n,
+                                        budget=1 << 27)
+    sel, _ = costing.select_candidates([(chain(5), cands)], apct, G.n)
+    assert len(sel) == 1
+    import math
+    shared = {}
+    assert costing.candidate_cost(sel[0][1], apct, G.n, shared) < math.inf
+
+
+def test_choose_cut_matches_cost_model():
+    """Engine choose_cut (now compiler-hosted) still minimises the
+    cost_model over decomposition candidates."""
+    import math
+    from repro.core import cost_model as CM
+    from repro.core.decomposition import candidates
+    m = MiningEngine(G)
+    for p in (chain(4), tailed_triangle(), clique(4)):
+        got = m.choose_cut(p)
+        best, bc = None, math.inf
+        for cand in candidates(p):
+            c = CM.pattern_cost(p, cand, m.apct, G.n)
+            if c < bc:
+                best, bc = cand, c
+        assert got == best
+    assert m.choose_cut(clique(4)) is None         # cliques: direct fallback
+
+
+# -- serving ----------------------------------------------------------------------
+
+def test_pattern_query_batcher(eng):
+    from repro.serve.batching import PatternQueryBatcher, PatternRequest
+    b = PatternQueryBatcher(G, max_batch=3)
+    pats = (chain(4), clique(3))
+    for i in range(5):
+        b.submit(PatternRequest(uid=i, patterns=pats))
+    b.run_to_completion()
+    assert len(b.finished) == 5
+    assert b.stats["compiles"] == 1                # compile once
+    assert b.stats["cache_hits"] >= 1              # ... execute many
+    ref = {p: eng.edge_induced(p) for p in pats}
+    for req in b.finished:
+        assert req.done and req.counts == ref

@@ -1,6 +1,8 @@
 """Counting engine vs brute-force ground truth (+ property tests)."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.counting import (CountingEngine, brute_force_edge_induced,

@@ -30,9 +30,9 @@ def test_sharded_counting_matches_local():
         from repro.core.pattern import chain, clique
         from repro.core.counting import CountingEngine
         from repro.core.distributed import shard_adjacency, sharded_inj
+        from repro.launch.mesh import make_host_mesh
         g = erdos_renyi(64, 6.0, seed=1)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_host_mesh((2, 4), ("data", "model"))
         A = shard_adjacency(g.dense_adjacency(np.float64, pad=False), mesh)
         eng = CountingEngine(g)
         for p in (chain(4), clique(3)):
@@ -85,8 +85,8 @@ def test_dryrun_driver_small_mesh():
         from repro.configs.base import SHAPES
         from repro.distributed.meshes import sharding_ctx
         import jax
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh((2, 4), ("data", "model"))
         import dataclasses
         from repro.configs.base import reduced_config
         cfg = dataclasses.replace(reduced_config(get_config("qwen3-4b")),

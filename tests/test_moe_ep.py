@@ -23,8 +23,8 @@ def test_ep_matches_einsum_and_grads():
         from repro.configs.registry import get_config
         from repro.models.transformer import Model
         from repro.distributed.meshes import sharding_ctx
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh((2, 4), ("data", "model"))
         cfg = reduced_config(get_config("dbrx-132b"))
         model = Model(cfg)
         params = model.init(jax.random.PRNGKey(0))
@@ -57,8 +57,8 @@ def test_full_mesh_ep_when_experts_divide_mesh():
         from repro.configs.registry import get_config
         from repro.models.transformer import Model
         from repro.distributed.meshes import sharding_ctx
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh((2, 4), ("data", "model"))
         cfg = reduced_config(get_config("dbrx-132b"))
         cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
             cfg.moe, num_experts=8, top_k=2, capacity_factor=8.0))

@@ -1,6 +1,8 @@
 """Pattern machinery: canonical forms, automorphisms, motifs, quotients."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.motifs import motif_patterns

@@ -11,6 +11,8 @@ import random
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import homomorphism as H
