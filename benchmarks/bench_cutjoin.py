@@ -1,0 +1,108 @@
+"""CutJoin execution tiers: Pallas masked-reduce kernel vs the XLA
+``_join_reduce`` (dense factor stack x materialised mask) vs the legacy
+direct contraction path.
+
+Two levels:
+
+* primitive — synthetic integer cut tensors, |cut| in {1, 2}, timing one
+  join evaluation per tier (the mask the XLA tier needs is prebuilt and
+  amortised, which flatters it; the kernel never builds one);
+* end-to-end — a decomposed tailed-triangle plan against an ER graph,
+  timing a full compiled count with the kernel tier on/off, plus the
+  legacy ``CountingEngine.edge_induced`` direct path.
+
+Run: PYTHONPATH=src python benchmarks/bench_cutjoin.py [--scale small]
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, "benchmarks")
+from common import emit, timeit
+
+from repro.graph import generators as gen
+from repro.kernels import ops
+from repro.compiler import frontend, lowering
+
+
+def _factors(n: int, cut: int, k: int, seed: int):
+    rng = np.random.default_rng(seed)
+    shape = (n,) * cut
+    return [rng.integers(0, 8, size=shape).astype(np.float64)
+            for _ in range(k)]
+
+
+def bench_primitive(n: int, cut: int, k: int = 2, repeat: int = 0):
+    repeat = repeat or (50 if cut == 1 else 20)
+    Ms = _factors(n, cut, k, seed=n + cut)
+
+    # the same routing the compiler uses: chunk size from the exactness
+    # guard (per-chunk f32 partials provably exact on integer factors)
+    block = ops.cutjoin_exact_block(Ms)
+    assert block is not None
+
+    dt, got_k = timeit(lambda: ops.cutjoin_reduce(Ms, distinct=cut >= 2,
+                                                  bm=block, bn=block),
+                       repeat=repeat, warmup=True)
+    emit(f"cutjoin/kernel/n={n}/cut={cut}", dt * 1e6)
+
+    mask = None
+    if cut >= 2:
+        mask = 1.0 - np.eye(n)              # prebuilt: amortises the XLA tier
+
+    def xla_join():
+        with jax.experimental.enable_x64():
+            stack = [jnp.asarray(M) for M in Ms]
+            if mask is not None:
+                stack.append(jnp.asarray(mask))
+            return float(lowering._join_reduce(jnp.stack(stack)))
+
+    dt, got_x = timeit(xla_join, repeat=repeat, warmup=True)
+    emit(f"cutjoin/xla/n={n}/cut={cut}", dt * 1e6)
+    assert got_k == got_x, (n, cut, got_k, got_x)
+
+
+def bench_end_to_end(n: int, repeat: int = 3):
+    from repro.core.counting import CountingEngine
+    from repro.core.pattern import cycle
+    g = gen.erdos_renyi(n, 8.0, seed=11)
+    p = cycle(4)                            # cut {0, 2}: a true 2-cut join
+    cand = frontend.decomposed_candidate(p, frozenset({0, 2}), graph_n=g.n)
+    plan = frontend.assemble([(p, cand)])
+
+    join = next(node for node in plan.nodes.values()
+                if type(node).__name__ == "CutJoin")
+    eng = CountingEngine(g)
+    cp = lowering.lower(plan, g, counter=eng, cutjoin_kernel=True)
+    cp.count(p)                             # materialise factor tensors
+    dt, got_k = timeit(lambda: cp._eval_cutjoin(join), repeat=repeat,
+                       warmup=True)
+    emit(f"cutjoin/e2e-kernel/n={n}", dt * 1e6)
+
+    cx = lowering.lower(plan, g, counter=eng, cutjoin_kernel=False)
+    cx.count(p)
+    dt, got_x = timeit(lambda: cx._eval_cutjoin(join), repeat=repeat,
+                       warmup=True)
+    emit(f"cutjoin/e2e-xla/n={n}", dt * 1e6)
+    assert got_k == got_x, (got_k, got_x)
+
+    dt, got_d = timeit(lambda: CountingEngine(g).edge_induced(p), repeat=1,
+                       warmup=False)
+    emit(f"cutjoin/e2e-direct/n={n}", dt * 1e6)
+    assert abs(got_d - cp.count(p)) < 1e-6, (got_d, cp.count(p))
+
+
+def main():
+    sizes = (512, 1024) if "--scale" not in sys.argv else (512,)
+    for n in sizes:
+        for cut in (1, 2):
+            bench_primitive(n, cut)
+    bench_end_to_end(512)
+
+
+if __name__ == "__main__":
+    main()

@@ -49,7 +49,8 @@ def default_cache() -> PlanCache:
 def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
             apct=None, counter=None, cache: Optional[PlanCache] = None,
             budget: int = 1 << 27, max_cutjoin_cut: int = 2,
-            use_pallas: bool = False) -> CompiledPlan:
+            use_pallas: bool = False,
+            cutjoin_kernel: bool = True) -> CompiledPlan:
     """Compile a pattern (or application pattern set) for one graph.
 
     Cache hit: deserialise the stored plan and lower it (no search).
@@ -58,7 +59,11 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
 
     ``cache=False`` disables caching; ``cache=None`` uses the process
     cache.  ``apct``/``counter`` let callers (e.g. ``MiningEngine``)
-    share their profiling table and hom memo with the compiled plan.
+    share their profiling table and hom memo with the compiled plan —
+    the counter's materialised hom/free-hom memos also feed costing, so
+    re-compiles against a warm engine prefer decompositions whose cut
+    tensors already exist.  ``cutjoin_kernel=False`` keeps CutJoin on the
+    XLA ``_join_reduce`` path (the kernel tier's oracle).
     """
     if isinstance(patterns, Pattern):
         patterns = (patterns,)
@@ -74,10 +79,15 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
     key = plan_key(patterns, graph)
     if use_cache:
         plan = cache.get(key)
-        if plan is not None:
+        # a stored plan is only valid under the compile configuration
+        # that selected it: candidate eligibility depends on budget and
+        # max_cutjoin_cut, so a cross-config hit could return a plan the
+        # executor must refuse (PlanTooWide) — recompile instead
+        if plan is not None and plan.meta.get("budget") == budget \
+                and plan.meta.get("max_cutjoin_cut") == max_cutjoin_cut:
             return lower(plan, graph, counter=counter,
                          use_pallas=use_pallas, from_cache=True,
-                         budget=budget)
+                         budget=budget, cutjoin_kernel=cutjoin_kernel)
 
     if apct is None:
         from repro.core.apct import APCT
@@ -86,10 +96,12 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
         p, graph_n=graph.n, budget=budget,
         max_cutjoin_cut=max_cutjoin_cut)) for p in patterns]
     selections, total_cost = costing.select_candidates(
-        per_pattern, apct, graph.n, budget)
+        per_pattern, apct, graph.n, budget, counter=counter)
     plan = frontend.assemble(selections)
     plan.meta.update({
         "key": key,
+        "budget": budget,
+        "max_cutjoin_cut": max_cutjoin_cut,
         "estimated_cost": total_cost,
         "styles": {pattern_key(p): cand.style for p, cand in selections},
         "cuts": {pattern_key(p): sorted(cand.cut) if cand.cut else None
@@ -98,4 +110,5 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
     if use_cache:
         cache.put(key, plan)
     return lower(plan, graph, counter=counter, use_pallas=use_pallas,
-                 from_cache=False, budget=budget)
+                 from_cache=False, budget=budget,
+                 cutjoin_kernel=cutjoin_kernel)

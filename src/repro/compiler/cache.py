@@ -58,18 +58,25 @@ class PlanCache:
     def _file(self, key: str) -> str:
         return os.path.join(self.path, f"plan-{key}.json")
 
+    def _load_disk(self, key: str) -> Optional[Plan]:
+        """Parse the on-disk entry into the memory tier, or None for a
+        missing / truncated / stale-version file."""
+        f = self._file(key)
+        if not os.path.exists(f):
+            return None
+        try:
+            with open(f) as fh:
+                plan = Plan.from_json(fh.read())
+        except (json.JSONDecodeError, KeyError, ValueError,
+                OSError):                  # corrupt entry: recompile
+            return None
+        self._mem[key] = plan
+        return plan
+
     def get(self, key: str) -> Optional[Plan]:
         plan = self._mem.get(key)
         if plan is None and self.path:
-            f = self._file(key)
-            if os.path.exists(f):
-                try:
-                    with open(f) as fh:
-                        plan = Plan.from_json(fh.read())
-                    self._mem[key] = plan
-                except (json.JSONDecodeError, KeyError, ValueError,
-                        OSError):          # corrupt entry: recompile
-                    plan = None
+            plan = self._load_disk(key)
         if plan is None:
             self.misses += 1
             return None
@@ -79,13 +86,27 @@ class PlanCache:
     def put(self, key: str, plan: Plan):
         self._mem[key] = plan
         if self.path:
-            with open(self._file(key), "w") as fh:
-                fh.write(plan.to_json())
+            # write-temp + rename: a writer killed mid-write must never
+            # leave a truncated JSON at the final path (readers would
+            # re-parse and discard it on every lookup).  os.replace is
+            # atomic within a directory.
+            final = self._file(key)
+            tmp = f"{final}.tmp.{os.getpid()}"
+            try:
+                with open(tmp, "w") as fh:
+                    fh.write(plan.to_json())
+                os.replace(tmp, final)
+            finally:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
 
     def __contains__(self, key: str) -> bool:
-        """Peek without touching hit/miss counters."""
+        """Peek without touching hit/miss counters.  On-disk entries are
+        actually parsed (a truncated or stale-version file must not
+        report present only for get() to miss); a valid parse lands in
+        the memory tier, so the peek's work isn't repeated."""
         return key in self._mem or bool(
-            self.path and os.path.exists(self._file(key)))
+            self.path and self._load_disk(key) is not None)
 
     def __len__(self):
         return len(self._mem)

@@ -15,6 +15,20 @@ emitting a plan the executor must refuse whenever a finite-cost
 candidate exists; if *no* candidate is executable the direct plan is
 kept (uncommitted, total cost inf) and the executor's ``PlanTooWide``
 triggers the caller's fallback.
+
+Two extensions of the shared pool:
+
+* ``CutJoin`` with |cut| <= 2 is costed as the fused Pallas kernel tier
+  (``kernels.ops.cutjoin_reduce``): per-tile streaming with the
+  injectivity mask computed in-kernel, so it never pays (or gates on) an
+  O(n^|cut|) mask materialisation — only wider cuts keep the dense-mask
+  gate.
+* when a ``CountingEngine`` is threaded in (``counter=``), hom scalars
+  and free-hom tensors it has already materialised cost zero: its
+  ``(pattern, free)``-keyed ``hom_free_memo`` (and canonical-pattern
+  ``hom_memo``) extend the shared pool across cut choices *and* across
+  compiles that reuse the engine (MiningEngine, the serving batcher), so
+  costing prefers decompositions whose cut tensors already exist.
 """
 from __future__ import annotations
 
@@ -56,15 +70,34 @@ def _contract_cost(node: Contract, apct, n_vertices: int,
     return total
 
 
-def node_cost(node, apct, n_vertices: int, budget: int = 1 << 27) -> float:
+def _materialised(node: Contract, counter) -> bool:
+    """True when the engine already holds this contraction's value: the
+    hom scalar (canonical pattern) or the free-hom tensor under the
+    engine's ``(skeleton pattern, free)`` memo key — exactly the key
+    lowering evaluates with, so zero cost here is zero work there."""
+    if counter is None:
+        return False
+    if node.free:
+        skel = Pattern(node.pattern.n, node.pattern.edges)
+        return counter.has_free_tensor(skel, node.free)
+    return counter.has_hom(node.pattern)
+
+
+def node_cost(node, apct, n_vertices: int, budget: int = 1 << 27,
+              counter=None) -> float:
     if isinstance(node, Contract):
+        if _materialised(node, counter):
+            return 0.0
         return _contract_cost(node, apct, n_vertices, budget)
     if isinstance(node, Intersect):
         # ordered enumeration: linear scan + one unit per (approximate)
         # clique tuple
         return apct.query(clique(node.k)) + n_vertices
     if isinstance(node, CutJoin):
-        if n_vertices ** node.cut_size > 4 * budget:
+        # |cut| <= 2 runs the fused kernel tier: tiles stream through
+        # VMEM with the injectivity mask computed in-kernel, so only
+        # wider cuts gate on materialising the dense mask
+        if node.cut_size > 2 and n_vertices ** node.cut_size > 4 * budget:
             return math.inf
         join = (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** node.cut_size
         return join * max(len(node.factors), 1)
@@ -76,38 +109,44 @@ def node_cost(node, apct, n_vertices: int, budget: int = 1 << 27) -> float:
 
 
 def candidate_cost(cand: Candidate, apct, n_vertices: int,
-                   shared: Dict[str, float], budget: int = 1 << 27) -> float:
+                   shared: Dict[str, float], budget: int = 1 << 27,
+                   counter=None) -> float:
     """Cost of one candidate given already-scheduled nodes (cost 0)."""
     total = 0.0
     for node in cand.nodes:
         if node.key in shared:
             continue
-        total += node_cost(node, apct, n_vertices, budget)
+        total += node_cost(node, apct, n_vertices, budget, counter)
         if total == math.inf:
             return math.inf
     return total
 
 
 def commit(cand: Candidate, apct, n_vertices: int,
-           shared: Dict[str, float], budget: int = 1 << 27):
+           shared: Dict[str, float], budget: int = 1 << 27, counter=None):
     for node in cand.nodes:
         if node.key not in shared:
-            shared[node.key] = node_cost(node, apct, n_vertices, budget)
+            shared[node.key] = node_cost(node, apct, n_vertices, budget,
+                                         counter)
 
 
 def select_candidates(per_pattern: List[Tuple[Pattern, List[Candidate]]],
                       apct, n_vertices: int,
-                      budget: int = 1 << 27):
+                      budget: int = 1 << 27, counter=None):
     """Greedy joint selection over the application: for each pattern pick
     the cheapest candidate under the current shared pool, then commit its
-    nodes.  Returns ([(pattern, winner)], total_cost)."""
+    nodes.  Returns ([(pattern, winner)], total_cost).
+
+    ``counter`` extends the pool with contractions the engine has already
+    materialised (see ``_materialised``)."""
     shared: Dict[str, float] = {}
     out = []
     total = 0.0
     for p, cands in per_pattern:
         best, bc = None, math.inf
         for cand in cands:
-            c = candidate_cost(cand, apct, n_vertices, shared, budget)
+            c = candidate_cost(cand, apct, n_vertices, shared, budget,
+                               counter)
             if c < bc:
                 best, bc = cand, c
         if best is None:
@@ -118,7 +157,7 @@ def select_candidates(per_pattern: List[Tuple[Pattern, List[Candidate]]],
             out.append((p, cands[0]))
             total = math.inf
             continue
-        commit(best, apct, n_vertices, shared, budget)
+        commit(best, apct, n_vertices, shared, budget, counter)
         out.append((p, best))
         total += bc
     return out, total

@@ -30,6 +30,9 @@ Ops
 
 Every op is a frozen dataclass with a ``to_dict``/``from_dict`` pair;
 ``Plan`` serialises to canonical JSON so cached plans survive processes.
+Serialised plans carry ``PLAN_FORMAT_VERSION``; deserialising any other
+version raises ``ValueError``, which the on-disk cache treats as a clean
+miss — stale-format entries recompile instead of half-loading.
 """
 from __future__ import annotations
 
@@ -40,6 +43,10 @@ from typing import Dict, Optional, Tuple
 from repro.core.pattern import Pattern
 
 Term = Tuple[float, str]                    # (coefficient, node key)
+
+# serialised-plan schema version; bump on any incompatible IR change so
+# on-disk caches written by older code miss cleanly (see Plan.from_dict)
+PLAN_FORMAT_VERSION = 2
 
 
 # -- pattern (de)serialisation ---------------------------------------------------
@@ -220,7 +227,8 @@ class Plan:
 
     # -- serialisation -----------------------------------------------------------
     def to_dict(self) -> dict:
-        return {"nodes": [n.to_dict() for n in self.nodes.values()],
+        return {"version": PLAN_FORMAT_VERSION,
+                "nodes": [n.to_dict() for n in self.nodes.values()],
                 "outputs": dict(self.outputs), "meta": dict(self.meta)}
 
     def to_json(self) -> str:
@@ -228,6 +236,10 @@ class Plan:
 
     @classmethod
     def from_dict(cls, d: dict) -> "Plan":
+        version = d.get("version", 1)
+        if version != PLAN_FORMAT_VERSION:
+            raise ValueError(f"plan format version {version}, "
+                             f"expected {PLAN_FORMAT_VERSION}")
         plan = cls(meta=dict(d.get("meta", {})))
         for nd in d["nodes"]:
             plan.add(op_from_dict(nd))

@@ -7,9 +7,22 @@ evaluates nodes on demand with per-node memoisation:
                     elimination einsums, f64, budget-chunked);
 * ``Intersect``  -> degeneracy-ordered clique enumeration, or the Pallas
                     ``triangle_count`` kernel when ``use_pallas`` is set
-                    (k == 3, f32 MXU path);
-* ``CutJoin``    -> a jitted masked product-reduce over the per-subpattern
-                    cut tensors (the decomposition join);
+                    (k == 3, f32 MXU path; inputs zero-padded to the tile
+                    multiple, so any ``n`` works);
+* ``CutJoin``    -> the fused Pallas kernel tier for |cut| <= 2
+                    (``kernels.ops.cutjoin_reduce``): a k-factor masked
+                    product-reduce whose injectivity mask is derived
+                    in-kernel from tile indices — no O(n^|cut|) mask is
+                    materialised — with chunked f32 tile partials summed
+                    on the host in f64.  |cut| = 1 takes the vector fast
+                    path.  Chunk sizes come from an exactness guard
+                    (``cutjoin_exact_block``): integer counts are only
+                    routed to f32 chunks the bound proves exact.  The
+                    jitted XLA ``_join_reduce`` (dense factor stack x
+                    explicit mask, f64) remains the fallback for wider
+                    cuts / over-bound magnitudes / ``cutjoin_kernel=
+                    False``, and the interpret-mode oracle the kernel is
+                    tested against;
 * the combine ops run on host scalars.
 
 Node values memoise per plan *and* feed the engine's hom memo, so
@@ -41,11 +54,12 @@ class CompiledPlan:
     def __init__(self, plan: Plan, graph: Graph,
                  counter: Optional[CountingEngine] = None,
                  use_pallas: bool = False, from_cache: bool = False,
-                 budget: int = 1 << 27):
+                 budget: int = 1 << 27, cutjoin_kernel: bool = True):
         self.plan = plan
         self.graph = graph
         self.counter = counter or CountingEngine(graph, budget=budget)
         self.use_pallas = use_pallas
+        self.cutjoin_kernel = cutjoin_kernel
         self.from_cache = from_cache
         self._values: Dict[str, object] = {}
         self._masks: Dict[int, np.ndarray] = {}
@@ -113,6 +127,14 @@ class CompiledPlan:
             for coeff, ref in terms:
                 M = M + coeff * np.asarray(self.value(ref), np.float64)
             Ms.append(M)
+        if self.cutjoin_kernel and node.cut_size <= 2:
+            from repro.kernels import ops
+            block = ops.cutjoin_exact_block(Ms)
+            if block is not None:            # f32 chunks provably exact
+                return ops.cutjoin_reduce(Ms, distinct=node.cut_size >= 2,
+                                          bm=block, bn=block)
+            # factor magnitudes exceed what chunked f32 can represent
+            # exactly: fall through to the f64 XLA join
         if node.cut_size >= 2:               # injectivity of the cut tuple
             Ms.append(self._mask(node.cut_size))
         with self.counter._x64():
@@ -135,6 +157,8 @@ class CompiledPlan:
 
 
 def lower(plan: Plan, graph: Graph, *, counter=None, use_pallas=False,
-          from_cache=False, budget: int = 1 << 27) -> CompiledPlan:
+          from_cache=False, budget: int = 1 << 27,
+          cutjoin_kernel: bool = True) -> CompiledPlan:
     return CompiledPlan(plan, graph, counter=counter, use_pallas=use_pallas,
-                        from_cache=from_cache, budget=budget)
+                        from_cache=from_cache, budget=budget,
+                        cutjoin_kernel=cutjoin_kernel)

@@ -52,6 +52,18 @@ class CountingEngine:
         self.hom_free_memo: dict = {}
         self.stats = {"hom_evals": 0, "hom_hits": 0}
 
+    # -- memo peeks (costing reads these to zero-cost materialised work) -------
+    def has_hom(self, p: Pattern) -> bool:
+        """True when ``hom(p)`` is already memoised (no evaluation)."""
+        return p.canonical() in self.hom_memo
+
+    def has_free_tensor(self, p: Pattern, free: tuple) -> bool:
+        """True when the ``(pattern, free)``-keyed free-hom tensor is
+        already materialised — the compiler's costing stage treats such
+        ``Contract`` nodes as zero-cost (shared across cut choices and
+        across compiles that reuse this engine)."""
+        return (p, tuple(free)) in self.hom_free_memo
+
     # -- hom ------------------------------------------------------------------
     def _unary_for(self, p: Pattern):
         if p.labels is None:

@@ -77,12 +77,17 @@ class MiningEngine:
         if induced == "edge" and use_compiler and cut == "auto":
             try:
                 from repro import compiler
-                cp = self._compiled.get(p.canonical())
+                key = p.canonical()
+                cp = self._compiled.get(key)
                 if cp is None:
                     cp = compiler.compile((p,), self.graph, apct=self.apct,
                                           counter=self.counter)
-                    self._compiled[p.canonical()] = cp
-                return cp.count(p)
+                val = cp.count(p)
+                # cache only plans that executed: a plan whose execution
+                # raised (e.g. PlanTooWide) must not be retried from the
+                # memo on every later query
+                self._compiled[key] = cp
+                return val
             except Exception:
                 self.compiler_fallbacks += 1    # legacy path takes over
         if cut == "auto":

@@ -1,19 +1,52 @@
-"""Fused masked-matmul-and-reduce Pallas kernel:
-total = Σ_{i,j} mask[i,j] · (lhs @ rhsᵀ)[i,j].
+"""Fused masked-reduce Pallas kernels for counting-plan contractions.
 
-The final contraction step of a counting plan (e.g. triangle count
-= Σ A ⊙ (A@A)); fusing the reduction keeps the (M,N) product entirely in
-VMEM — it is never materialised to HBM.
+Two primitives live here:
+
+``matreduce``    total = Σ_{i,j} mask[i,j] · (lhs @ rhsᵀ)[i,j] — the final
+                 contraction step of a counting plan (e.g. triangle count
+                 = Σ A ⊙ (A@A)); fusing the reduction keeps the (M,N)
+                 product entirely in VMEM, never materialised to HBM.
+
+``prod_reduce``  the k-factor masked product-reduce behind the compiler's
+                 ``CutJoin`` op: Σ_{x,y} [x≠y] · Π_i F_i[x,y] over stacked
+                 2-D factor tensors (|cut| = 2), or Σ_x Π_i F_i[x] for 1-D
+                 factors (|cut| = 1, no mask needed — a single cut vertex
+                 is always injective).  The off-diagonal injectivity mask
+                 is derived *in-kernel* from tile indices (broadcasted
+                 iotas offset by the grid position), so no O(n²) mask is
+                 ever built.  Each 2-D grid tile writes a row of per-
+                 column f32 partials (each accumulating bm cells; 1-D
+                 chunks write one bn-cell scalar); the host reduces the
+                 partials in f64, so integer counts stay exact as long as
+                 every chunk partial fits f32's 2^24 integer range —
+                 ``exact_block`` picks the chunk size that provably does.
+
+Both primitives zero-pad their inputs up to the tile multiple, so any
+``n`` works; padding is value-preserving because padded mask / factor
+entries are zero and the reduction is a sum.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(lhs_ref, rhs_ref, mask_ref, out_ref, acc_ref):
+def _pad_to(x, multiples):
+    """Zero-pad every axis of ``x`` up to the matching tile multiple."""
+    pads = [(0, (-s) % m) for s, m in zip(x.shape, multiples)]
+    if any(p for _, p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+# -- matreduce: Σ mask ⊙ (lhs @ rhsᵀ) ---------------------------------------------
+
+def _matreduce_kernel(lhs_ref, rhs_ref, mask_ref, out_ref, acc_ref):
     i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     first = (i == 0) & (j == 0) & (k == 0)
 
@@ -34,6 +67,9 @@ def matreduce(lhs, rhs, mask, *, bm: int = 128, bn: int = 128,
               bk: int = 128, interpret: bool = False):
     """Σ mask ⊙ (lhs @ rhsᵀ): lhs (M,K), rhs (N,K), mask (M,N) -> f32 scalar.
 
+    Inputs are zero-padded to the tile multiple (count-preserving: padded
+    mask entries are zero), so arbitrary shapes work.
+
     NOTE: with a K-grid the per-(i,j) product tile is partial, so the mask
     must be applied to partial products — valid because the mask is
     multiplicative and the reduction is a sum: Σ_k mask⊙P_k = mask⊙Σ_k P_k.
@@ -42,9 +78,12 @@ def matreduce(lhs, rhs, mask, *, bm: int = 128, bn: int = 128,
     N = rhs.shape[0]
     assert rhs.shape[1] == K and mask.shape == (M, N)
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    lhs = _pad_to(lhs, (bm, bk))
+    rhs = _pad_to(rhs, (bn, bk))
+    mask = _pad_to(mask, (bm, bn))
+    (M, K), N = lhs.shape, rhs.shape[0]
     out = pl.pallas_call(
-        _kernel,
+        _matreduce_kernel,
         grid=(M // bm, N // bn, K // bk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
@@ -57,3 +96,112 @@ def matreduce(lhs, rhs, mask, *, bm: int = 128, bn: int = 128,
         interpret=interpret,
     )(lhs, rhs, mask)
     return out[0, 0]
+
+
+# -- prod_reduce: Σ over (injective) index tuples of Π_i F_i ----------------------
+
+def _pairjoin_kernel(stack_ref, out_ref, *, nf, masked, bm, bn):
+    """One (bm, bn) tile of Σ [x≠y] · Π_i F_i[x, y]: product over the
+    factor axis, injectivity mask from tile indices, one row of per-
+    column f32 partials (each bounded by max|Π F| · bm — finer chunks
+    than a per-tile scalar, so large tiles stay exact on integers)."""
+    i, j = pl.program_id(0), pl.program_id(1)
+    prod = stack_ref[0, ...]
+    for f in range(1, nf):
+        prod = prod * stack_ref[f, ...]
+    if masked:
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
+        cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
+        prod = jnp.where(rows == cols, jnp.float32(0.0), prod)
+    out_ref[0, :] = jnp.sum(prod, axis=0)
+
+
+def _vecjoin_kernel(stack_ref, out_ref, *, nf):
+    """One bn-wide chunk of Σ_x Π_i F_i[x] (the |cut| = 1 fast path)."""
+    prod = stack_ref[0, ...]
+    for f in range(1, nf):
+        prod = prod * stack_ref[f, ...]
+    out_ref[0, 0] = jnp.sum(prod)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("distinct", "bm", "bn", "interpret"))
+def _pairjoin_tiles(stack, *, distinct, bm, bn, interpret):
+    k, M, N = stack.shape
+    grid = (M // bm, N // bn)
+    kern = functools.partial(_pairjoin_kernel, nf=k, masked=distinct,
+                             bm=bm, bn=bn)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, bm, bn), lambda i, j: (0, i, j))],
+        out_specs=pl.BlockSpec((1, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], N), jnp.float32),
+        interpret=interpret,
+    )(stack)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def _vecjoin_tiles(stack, *, bn, interpret):
+    k, N = stack.shape
+    grid = (N // bn,)
+    return pl.pallas_call(
+        functools.partial(_vecjoin_kernel, nf=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, bn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, grid[0]), jnp.float32),
+        interpret=interpret,
+    )(stack)
+
+
+EXACT_LIMIT = float(1 << 24)                 # f32 exact-integer range
+
+
+def exact_block(factors, max_block: int = 1024, min_block: int = 8):
+    """Largest power-of-two chunk size whose f32 partial sums stay exact
+    for integer-valued ``factors``.  A chunk accumulates ``b`` cells
+    (per-column partials of a (b, bn) tile for 2-D factors, one bn-wide
+    scalar for 1-D), so every partial is an integer bounded by
+    (Π_i max|F_i|) · b, and integers up to 2^24 are exactly
+    representable in f32.  Returns None when even a ``min_block`` chunk
+    cannot guarantee exactness — callers should take an f64 path
+    instead."""
+    maxprod = 1.0
+    for F in factors:
+        maxprod *= float(np.abs(np.asarray(F)).max())
+    b = max_block
+    while b >= min_block:
+        if maxprod * b <= EXACT_LIMIT:
+            return b
+        b //= 2
+    return None
+
+
+def prod_reduce(factors, *, distinct: bool = True, bm: int = 128,
+                bn: int = 128, interpret: bool = False) -> float:
+    """Σ over index tuples of Π_i F_i, factors all (n,) or all (n, n).
+
+    ``distinct`` (2-D only) restricts the sum to off-diagonal cells —
+    the |cut| = 2 injectivity constraint — via an in-kernel tile-index
+    mask; nothing O(n²) is ever materialised besides the factor tensors
+    the caller already holds.  Factors are cast to f32 and zero-padded to
+    the tile multiple; chunked f32 partials (per-column for 2-D tiles)
+    are reduced on the host in f64 — exact for integer-valued factors
+    while each chunk partial stays below 2^24, which ``exact_block``
+    certifies for a given factor set.
+    """
+    stack = jnp.stack([jnp.asarray(F, jnp.float32) for F in factors])
+    if stack.ndim == 2:                      # |cut| = 1: vector fast path
+        N = stack.shape[1]
+        stack = _pad_to(stack, (1, min(bn, max(N, 1))))
+        tiles = _vecjoin_tiles(stack, bn=min(bn, stack.shape[1]),
+                               interpret=interpret)
+    else:
+        assert stack.ndim == 3 and stack.shape[1] == stack.shape[2]
+        M = stack.shape[1]
+        b = min(bm, bn, max(M, 1))
+        stack = _pad_to(stack, (1, b, b))
+        tiles = _pairjoin_tiles(stack, distinct=distinct, bm=b, bn=b,
+                                interpret=interpret)
+    return float(np.asarray(tiles, np.float64).sum())

@@ -61,6 +61,40 @@ def triangle_count(adj, *, interpret=None):
     return masked_matmul_reduce(a, a, a, interpret=interpret) / 6.0
 
 
+def cutjoin_reduce(factors, *, distinct=True, bm=None, bn=None,
+                   interpret=None) -> float:
+    """The decomposition join Σ_{e_c} Π_i M_i(e_c) as a fused kernel.
+
+    ``factors`` is a sequence of equal-shape cut tensors: (n,) vectors for
+    |cut| = 1 (``distinct`` is moot — one vertex is always injective) or
+    (n, n) matrices for |cut| = 2, where ``distinct`` applies the
+    off-diagonal injectivity mask in-kernel from tile indices.  Arbitrary
+    ``n`` works (zero-padding to the tile multiple); the result is the
+    f64 host-side sum of per-tile f32 partials.
+
+    Default tiles: 128 on TPU (MXU-aligned, VMEM-sized) but 1024 in
+    interpret mode, where per-grid-step dispatch dominates and VMEM is
+    not a constraint — fewer, larger chunks keep the CPU validation path
+    faster than the XLA dense-mask join.
+    """
+    interpret = _auto_interpret(interpret)
+    if bm is None:
+        bm = 1024 if interpret else 128
+    if bn is None:
+        bn = bm
+    return _mr.prod_reduce(factors, distinct=distinct, bm=bm, bn=bn,
+                           interpret=interpret)
+
+
+def cutjoin_exact_block(factors, *, interpret=None):
+    """Chunk size for which ``cutjoin_reduce`` is exact on the given
+    integer-valued factors, or None when no f32 chunking can guarantee
+    it (callers should use an f64 path).  See ``matreduce.exact_block``.
+    """
+    cap = 1024 if _auto_interpret(interpret) else 128
+    return _mr.exact_block(factors, max_block=cap)
+
+
 def common_neighbors(adj_bool: np.ndarray, edges: np.ndarray, *,
                      interpret=None):
     """Per-edge common-neighbour counts via the bitset kernel."""

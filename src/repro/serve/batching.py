@@ -57,13 +57,21 @@ class ContinuousBatcher:
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _admit(self, slot: int, req: Request):
+    def _admit(self, slot: int, req: Request) -> bool:
         """Prefill the prompt, sample the first token from the prefill
-        logits, and splice the prompt KV into the batch cache."""
+        logits, and splice the prompt KV into the batch cache.  A request
+        already finished by its first token (EOS, or max_new_tokens == 1)
+        retires immediately and leaves the slot free: returns False."""
         from repro.models.transformer import cache_specs
         prompt = jnp.asarray(req.prompt[None, :])
         logits, caches, _ = self.model(self.params, prompt, mode="prefill")
         T = req.prompt.shape[0]
+        first = int(np.asarray(greedy_sample(logits[0, -1:]))[0])
+        req.generated.append(first)
+        if first == req.eos_id or len(req.generated) >= req.max_new_tokens:
+            req.done = True
+            self.finished.append(req)
+            return False
         _, ax_tree = cache_specs(self.cfg, 1, T)
         is_axes = lambda t: (isinstance(t, tuple) and
                              all(isinstance(e, (str, type(None)))
@@ -82,17 +90,18 @@ class ContinuousBatcher:
             idx[1] = slice(slot, slot + 1)
             out.append(batch_c.at[tuple(idx)].set(one_c))
         self.cache = jax.tree.unflatten(treedef, out)
-        first = int(np.asarray(greedy_sample(logits[0, -1:]))[0])
-        req.generated.append(first)
         self.positions[slot] = T
         self.last_token[slot] = first
         self.active[slot] = req
+        return True
 
     def step(self):
-        # admissions
+        # admissions: a request that finishes at prefill frees its slot
+        # for the next queued request within the same step
         for slot in range(self.slots):
-            if slot not in self.active and self.queue:
-                self._admit(slot, self.queue.popleft())
+            while slot not in self.active and self.queue:
+                if self._admit(slot, self.queue.popleft()):
+                    break
         if not self.active:
             return False
         toks = jnp.asarray(self.last_token[:, None])
@@ -130,6 +139,7 @@ class PatternRequest:
     counts: dict = field(default_factory=dict)
     from_cache: bool = False
     done: bool = False
+    error: bool = False                 # served neither compiled nor direct
 
 
 class PatternQueryBatcher:
@@ -152,13 +162,58 @@ class PatternQueryBatcher:
         self.counter = CountingEngine(graph)
         self.queue: collections.deque = collections.deque()
         self.finished: list = []
-        self.stats = {"steps": 0, "compiles": 0, "cache_hits": 0}
+        self._plans: dict = {}          # pattern-set signature -> CompiledPlan
+        self.stats = {"steps": 0, "compiles": 0, "cache_hits": 0,
+                      "fallbacks": 0, "errors": 0}
 
     def submit(self, req: PatternRequest):
         self.queue.append(req)
 
-    def step(self) -> bool:
+    def _plan_for(self, sig: str, patterns: tuple):
+        """CompiledPlan for one group, memoised per signature so repeat
+        steps reuse the lowered plan (and its node-value memo) instead of
+        re-lowering on every plan-cache hit.  None when compilation
+        fails — callers serve the group via the direct path."""
+        cp = self._plans.get(sig)
+        if cp is not None:
+            self.stats["cache_hits"] += 1
+            return cp
         from repro import compiler
+        key = compiler.plan_key(patterns, self.graph)
+        if key not in self.cache and self.apct is None:
+            from repro.core.apct import APCT
+            self.apct = APCT(self.graph)       # one profile, all compiles
+        try:
+            cp = compiler.compile(patterns, self.graph, apct=self.apct,
+                                  counter=self.counter, cache=self.cache)
+        except Exception:
+            return None
+        self.stats["cache_hits" if cp.from_cache else "compiles"] += 1
+        self._plans[sig] = cp
+        return cp
+
+    def _serve(self, req: PatternRequest, cp):
+        """Fill one request: compiled plan first, legacy direct second;
+        a request is always finished, never silently dropped."""
+        try:
+            if cp is not None:
+                req.counts = {p: cp.count(p) for p in req.patterns}
+                req.from_cache = cp.from_cache
+            else:
+                raise RuntimeError("no compiled plan")
+        except Exception:
+            try:                        # e.g. PlanTooWide at execution
+                req.counts = {p: self.counter.edge_induced(p)
+                              for p in req.patterns}
+                req.from_cache = False
+                self.stats["fallbacks"] += 1
+            except Exception:
+                req.error = True
+                self.stats["errors"] += 1
+        req.done = True
+        self.finished.append(req)
+
+    def step(self) -> bool:
         from repro.compiler.cache import patterns_signature
         if not self.queue:
             return False
@@ -168,20 +223,10 @@ class PatternQueryBatcher:
         for req in batch:
             groups.setdefault(patterns_signature(req.patterns),
                               []).append(req)
-        for reqs in groups.values():
-            key = compiler.plan_key(reqs[0].patterns, self.graph)
-            if key not in self.cache and self.apct is None:
-                from repro.core.apct import APCT
-                self.apct = APCT(self.graph)   # one profile, all compiles
-            cp = compiler.compile(reqs[0].patterns, self.graph,
-                                  apct=self.apct, counter=self.counter,
-                                  cache=self.cache)
-            self.stats["cache_hits" if cp.from_cache else "compiles"] += 1
+        for sig, reqs in groups.items():
+            cp = self._plan_for(sig, reqs[0].patterns)
             for req in reqs:
-                req.counts = {p: cp.count(p) for p in req.patterns}
-                req.from_cache = cp.from_cache
-                req.done = True
-                self.finished.append(req)
+                self._serve(req, cp)
         self.stats["steps"] += 1
         return True
 

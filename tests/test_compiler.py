@@ -142,6 +142,107 @@ def test_plan_cache_on_disk(tmp_path):
         brute_force_edge_induced(G, tailed_triangle())
 
 
+def test_plan_cache_put_is_atomic(tmp_path):
+    """put writes via temp + os.replace: no temp debris, and a reader
+    that races a writer only ever sees a complete file."""
+    import os
+    cache = PlanCache(str(tmp_path))
+    pats = (chain(4),)
+    compiler.compile(pats, G, cache=cache)
+    files = os.listdir(tmp_path)
+    assert files and all(f.endswith(".json") for f in files)
+
+
+def test_plan_cache_truncated_entry_misses_then_heals(tmp_path):
+    """A truncated on-disk entry (writer killed mid-write, pre-fix
+    behaviour) is a clean miss; the next put replaces it with a valid
+    file that subsequent readers hit."""
+    cache = PlanCache(str(tmp_path))
+    pats = (chain(4),)
+    key = plan_key(pats, G)
+    cp = compiler.compile(pats, G, cache=cache)
+    full = open(cache._file(key)).read()
+    with open(cache._file(key), "w") as fh:
+        fh.write(full[: len(full) // 2])       # simulate a torn write
+    fresh = PlanCache(str(tmp_path))
+    assert fresh.get(key) is None
+    assert fresh.misses == 1
+    fresh.put(key, cp.plan)
+    again = PlanCache(str(tmp_path))
+    assert again.get(key) == cp.plan
+
+
+def test_plan_cache_stale_version_misses(tmp_path):
+    """Serialized plans carry PLAN_FORMAT_VERSION; an entry written by an
+    older format (or missing the field entirely) misses cleanly instead
+    of half-loading."""
+    import json
+    from repro.compiler.ir import PLAN_FORMAT_VERSION
+    cache = PlanCache(str(tmp_path))
+    pats = (chain(4),)
+    key = plan_key(pats, G)
+    cp = compiler.compile(pats, G, cache=cache)
+    d = json.loads(open(cache._file(key)).read())
+    assert d["version"] == PLAN_FORMAT_VERSION
+    for stale in (1, PLAN_FORMAT_VERSION + 1, None):
+        if stale is None:
+            d.pop("version", None)
+        else:
+            d["version"] = stale
+        with open(cache._file(key), "w") as fh:
+            fh.write(json.dumps(d))
+        fresh = PlanCache(str(tmp_path))
+        assert fresh.get(key) is None, stale
+    with pytest.raises(ValueError):
+        Plan.from_dict({"version": 1, "nodes": [], "outputs": {}})
+
+
+def test_plan_cache_config_mismatch_recompiles():
+    """A stored plan is only valid under the (budget, max_cutjoin_cut)
+    that selected it: candidate eligibility depends on both, so a
+    cross-config lookup recompiles instead of returning a plan the
+    executor might refuse."""
+    cache = PlanCache()
+    pats = (chain(4), tailed_triangle())
+    cp1 = compiler.compile(pats, G, cache=cache)
+    assert cp1.plan.meta["budget"] == 1 << 27
+    cp2 = compiler.compile(pats, G, cache=cache)
+    assert cp2.from_cache
+    small = CountingEngine(G, budget=1 << 12)
+    cp3 = compiler.compile(pats, G, cache=cache, counter=small)
+    assert not cp3.from_cache                  # budget differs: recompile
+    assert cp3.plan.meta["budget"] == 1 << 12
+    cp4 = compiler.compile(pats, G, cache=cache, max_cutjoin_cut=1)
+    assert not cp4.from_cache                  # cut cap differs: recompile
+    for p in pats:
+        assert cp3.count(p) == cp1.count(p) == cp4.count(p)
+
+
+def test_engine_does_not_cache_failing_plan(monkeypatch):
+    """A compiled plan whose execution raises must not be memoised: the
+    query falls back to the legacy path and later queries retry a fresh
+    compile rather than replaying the known-bad plan."""
+    from repro import compiler as compiler_mod
+    m = MiningEngine(G)
+    p = chain(4)
+
+    class _Boom:
+        from_cache = False
+
+        def count(self, _):
+            raise RuntimeError("plan refused at execution")
+
+    monkeypatch.setattr(compiler_mod, "compile",
+                        lambda *a, **k: _Boom())
+    want = brute_force_edge_induced(G, p)
+    assert m.get_pattern_count(p) == want      # legacy fallback served it
+    assert m.compiler_fallbacks == 1
+    assert p.canonical() not in m._compiled    # bad plan not memoised
+    monkeypatch.undo()
+    assert m.get_pattern_count(p) == want      # fresh compile succeeds
+    assert p.canonical() in m._compiled
+
+
 # -- equivalence ------------------------------------------------------------------
 
 EQ_PATTERNS = [chain(3), clique(3), chain(4), cycle(4), clique(4),
@@ -238,6 +339,30 @@ def test_pattern_query_batcher(eng):
     assert len(b.finished) == 5
     assert b.stats["compiles"] == 1                # compile once
     assert b.stats["cache_hits"] >= 1              # ... execute many
+    assert len(b._plans) == 1                      # lowered plan reused
     ref = {p: eng.edge_induced(p) for p in pats}
     for req in b.finished:
         assert req.done and req.counts == ref
+
+
+def test_pattern_query_batcher_survives_compile_failure(eng, monkeypatch):
+    """A compile (or execute) failure must not drop in-flight requests:
+    they finish through the legacy direct path instead."""
+    from repro import compiler as compiler_mod
+    from repro.serve.batching import PatternQueryBatcher, PatternRequest
+
+    def boom(*a, **k):
+        raise RuntimeError("compiler down")
+
+    monkeypatch.setattr(compiler_mod, "compile", boom)
+    b = PatternQueryBatcher(G, max_batch=2)
+    pats = (chain(4), clique(3))
+    for i in range(3):
+        b.submit(PatternRequest(uid=i, patterns=pats))
+    b.run_to_completion()
+    assert len(b.finished) == 3                    # nothing dropped
+    assert b.stats["fallbacks"] == 3
+    assert b.stats["errors"] == 0
+    ref = {p: eng.edge_induced(p) for p in pats}
+    for req in b.finished:
+        assert req.done and not req.error and req.counts == ref

@@ -49,6 +49,53 @@ def test_batcher_matches_sequential(setup):
         assert req.generated == want, (req.uid, req.generated, want)
 
 
+def test_batcher_max_one_token_retires_at_admission(setup):
+    """max_new_tokens=1: the prefill-sampled token is the whole output —
+    the request must retire at admission, never occupy a slot, and never
+    decode an extra token."""
+    model, params = setup
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, CFG.vocab_size, 6).astype(np.int32)
+    b = ContinuousBatcher(CFG, params, slots=2, capacity=32)
+    b.submit(Request(uid=0, prompt=prompt, max_new_tokens=1))
+    b.run_to_completion()
+    assert len(b.finished) == 1
+    req = b.finished[0]
+    assert req.done and len(req.generated) == 1
+    assert req.generated == _sequential_generate(CFG, params, list(prompt), 1)
+    assert not b.active                       # slot was never occupied
+
+
+def test_batcher_eos_on_first_token_retires_at_admission(setup):
+    """A request whose prefill-sampled first token is EOS retires at
+    admission instead of decoding one token past EOS."""
+    model, params = setup
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, CFG.vocab_size, 5).astype(np.int32)
+    first = _sequential_generate(CFG, params, list(prompt), 1)[0]
+    b = ContinuousBatcher(CFG, params, slots=2, capacity=32)
+    b.submit(Request(uid=0, prompt=prompt, max_new_tokens=8, eos_id=first))
+    b.run_to_completion()
+    assert len(b.finished) == 1
+    req = b.finished[0]
+    assert req.done and req.generated == [first]
+    assert not b.active
+
+
+def test_batcher_freed_slot_readmits_same_step(setup):
+    """Requests retiring at admission free their slot for the next
+    queued request within the same step."""
+    model, params = setup
+    rng = np.random.default_rng(5)
+    b = ContinuousBatcher(CFG, params, slots=1, capacity=32)
+    for i in range(3):
+        p = rng.integers(0, CFG.vocab_size, 5).astype(np.int32)
+        b.submit(Request(uid=i, prompt=p, max_new_tokens=1))
+    b.step()
+    assert len(b.finished) == 3               # all drained in one step
+    assert all(len(r.generated) == 1 for r in b.finished)
+
+
 def test_batcher_slot_reuse(setup):
     model, params = setup
     rng = np.random.default_rng(2)
