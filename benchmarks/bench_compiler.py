@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import tempfile
 
-from benchmarks.common import bench_graphs, emit, timeit
+from benchmarks.common import bench_graphs, emit, save_json, timeit
 from repro import compiler
 from repro.compiler.cache import PlanCache
 from repro.core.apct import APCT
@@ -88,5 +88,20 @@ def run(scale: str = "micro", k: int = 4, q: int = 10):
                      f"hits={hits}")
 
 
+def main():
+    import argparse
+    from benchmarks.common import RESULTS
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one micro configuration (CI), JSON results")
+    args = ap.parse_args()
+    start = len(RESULTS)
+    if args.smoke:
+        run(scale="micro", k=3, q=5)
+    else:
+        run()
+    save_json("compiler", start)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,25 +1,101 @@
 """Fig 30 + FSM rows of Tables 4/5: FSM runtime across support thresholds
-(3-FSM and 4-FSM on a labelled clustered graph)."""
+(3-FSM and 4-FSM on a labelled clustered graph).
+
+Three regimes per (k, support) cell, same lattice walk:
+
+  legacy   — the pre-refactor per-vertex path: one Möbius expansion per
+             pattern vertex, H.hom_count called directly (no memo);
+  batched  — the vectorised fallback: one ``inj_free_all`` matrix per
+             pattern through the shared engine's canonical free-hom memo;
+  compiled — level-wise joint compilation: one
+             ``compiler.compile(frontier, domains=True)`` per lattice
+             level, domains per automorphism orbit, CSE across siblings.
+
+``--smoke`` runs one tiny configuration (CI) and writes
+``benchmarks/results/BENCH_fsm.json`` either way.
+"""
 from __future__ import annotations
 
-from benchmarks.common import emit, timeit
+import argparse
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, timeit
+from repro.core import homomorphism as H
 from repro.core.counting import CountingEngine
 from repro.core.fsm import fsm
+from repro.core.quotient import mobius, partitions
 from repro.graph import generators as gen
 
 
+def _legacy_mini_support(counter: CountingEngine, p) -> int:
+    """The pre-refactor MINI support: p.n separate inj expansions, each
+    contracting afresh (no cross-vertex, cross-pattern, or cross-level
+    reuse) — the baseline the compiled path is measured against."""
+    sup = counter.graph.n
+    with counter._x64():                   # exact f64, as the seed path
+        for v in range(p.n):
+            total = np.zeros(counter.graph.n)
+            for sigma in partitions(tuple(range(p.n))):
+                q, blk = p.quotient_with_map(sigma)
+                if q is None:
+                    continue
+                vec = H.hom_count(q, counter.A, free=(blk[v],),
+                                  unary=counter._unary_for(q),
+                                  budget=counter.budget)
+                total = total + mobius(sigma) * np.asarray(vec, np.float64)
+            sup = min(sup, int(np.count_nonzero(total > 0.5)))
+    return sup
+
+
+def _cell(g, support: int, kv: int, apct):
+    """One (k, support) cell: run all three regimes on fresh engines."""
+    dt_l, r_l = timeit(fsm, g, support, kv, None, CountingEngine(g),
+                       use_compiler=False,
+                       support_fn=_legacy_mini_support)
+    dt_b, r_b = timeit(fsm, g, support, kv, None, CountingEngine(g),
+                       use_compiler=False)
+    dt_c, r_c = timeit(fsm, g, support, kv, None, CountingEngine(g),
+                       apct=apct, plan_cache=False)
+    assert r_l.frequent == r_b.frequent == r_c.frequent, \
+        "FSM regimes disagree"
+    tag = f"fsm/{kv}-FSM/sup{support}"
+    emit(f"{tag}/legacy", dt_l * 1e6,
+         f"frequent={len(r_l.frequent)} pruned={r_l.pruned}")
+    emit(f"{tag}/batched", dt_b * 1e6,
+         f"speedup={dt_l / max(dt_b, 1e-12):.1f}x")
+    emit(f"{tag}/compiled", dt_c * 1e6,
+         f"speedup={dt_l / max(dt_c, 1e-12):.1f}x "
+         f"levels={r_c.compiled_levels}/{r_c.levels}")
+
+
 def run(scale: str = "small"):
-    g = gen.triangle_rich(800, 24, seed=5, num_labels=6)
-    counter = CountingEngine(g)
-    for kv in (3, 4):
+    from repro.core.apct import APCT
+    if scale == "smoke":
+        g = gen.triangle_rich(240, 8, seed=5, num_labels=3)
+        cells = [(3, 20), (3, 60)]
+    else:
+        g = gen.triangle_rich(800, 24, seed=5, num_labels=6)
         # max seed support on this graph is ~92; low thresholds explode
         # the candidate set (4-FSM sup30 mines 670 patterns in ~10 min)
-        for support in ((50, 100, 300, 1000) if kv == 3
-                        else (80, 100, 300, 1000)):
-            dt, r = timeit(fsm, g, support, kv, None, counter)
-            emit(f"fsm/{kv}-FSM/sup{support}", dt * 1e6,
-                 f"frequent={len(r.frequent)} pruned={r.pruned}")
+        cells = [(3, s) for s in (50, 100, 300, 1000)] + \
+                [(4, s) for s in (80, 100, 300, 1000)]
+    apct = APCT(g, num_samples=4096)
+    for kv, support in cells:
+        _cell(g, support, kv, apct)
+
+
+def main():
+    from benchmarks.common import RESULTS
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny configuration (CI)")
+    ap.add_argument("--scale", default="small")
+    args = ap.parse_args()
+    start = len(RESULTS)
+    run("smoke" if args.smoke else args.scale)
+    save_json("fsm", start)
 
 
 if __name__ == "__main__":
-    run()
+    main()

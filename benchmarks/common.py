@@ -1,6 +1,9 @@
-"""Shared benchmark utilities: timing, CSV emission, standard graphs."""
+"""Shared benchmark utilities: timing, CSV/JSON emission, standard
+graphs."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 from repro.graph import generators as gen
@@ -12,6 +15,23 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     line = f"{name},{us_per_call:.1f},{derived}"
     RESULTS.append(line)
     print(line, flush=True)
+
+
+def save_json(suite: str, start_index: int = 0) -> pathlib.Path:
+    """Write rows emitted since ``start_index`` to
+    ``benchmarks/results/BENCH_<suite>.json`` (the machine-readable perf
+    trajectory the CI workflow uploads as a build artifact)."""
+    rows = []
+    for line in RESULTS[start_index:]:
+        name, us, derived = line.split(",", 2)
+        rows.append({"name": name, "us_per_call": float(us),
+                     "derived": derived})
+    out = pathlib.Path(__file__).parent / "results" / f"BENCH_{suite}.json"
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps({"suite": suite, "rows": rows}, indent=1)
+                   + "\n")
+    print(f"wrote {len(rows)} rows to {out}", flush=True)
+    return out
 
 
 def timeit(fn, *args, repeat: int = 1, warmup: bool = False, **kw):

@@ -17,9 +17,22 @@ package is that tier, as a pipeline of five stages:
     plan IR    ──cache─────► keyed by (canonical pattern set, graph
                   signature): compile once, execute many
 
+Vertex labels are first-class through every stage: labelled patterns
+generate the same candidate space (decomposition joins included — the
+label mask lives inside each CutJoin factor, so the |cut| <= 2 Pallas
+kernel tier runs unchanged), costing scales count bounds by label
+selectivity, and lowering binds the pattern's label indices to the
+bound graph's one-hot indicator rows at plan-bind time — one plan
+serves any graph with a compatible label alphabet (out-of-alphabet
+labels bind to the zero vector).
+
 ``compile(patterns, graph)`` is the single entry point; it returns a
 ``CompiledPlan`` whose ``.plan`` is the serializable IR (``to_json``)
-and whose ``.count(p)`` / ``.counts()`` execute it.  ``MiningEngine``,
+and whose ``.count(p)`` / ``.counts()`` execute it.  With
+``domains=True`` the plan additionally carries FSM MINI-domain nodes
+(one vector per automorphism orbit) served by ``.domains(p)`` /
+``.mini_support(p)`` — the level-wise FSM in ``core.fsm`` compiles each
+candidate frontier jointly through this path.  ``MiningEngine``,
 ``launch.mine`` and ``serve.batching`` all route through here; the
 legacy direct path in ``core.counting`` remains as the fallback.
 """
@@ -46,11 +59,21 @@ def default_cache() -> PlanCache:
     return _DEFAULT_CACHE
 
 
+def _label_fracs(patterns, graph):
+    """label -> vertex fraction of the bound graph, for selectivity
+    pricing; None unless a labelled pattern meets a labelled graph."""
+    if graph.labels is None or all(p.labels is None for p in patterns):
+        return None
+    import numpy as np
+    counts = np.bincount(graph.labels, minlength=graph.num_labels)
+    return {l: counts[l] / max(graph.n, 1) for l in range(graph.num_labels)}
+
+
 def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
             apct=None, counter=None, cache: Optional[PlanCache] = None,
             budget: int = 1 << 27, max_cutjoin_cut: int = 2,
-            use_pallas: bool = False,
-            cutjoin_kernel: bool = True) -> CompiledPlan:
+            use_pallas: bool = False, cutjoin_kernel: bool = True,
+            domains: bool = False) -> CompiledPlan:
     """Compile a pattern (or application pattern set) for one graph.
 
     Cache hit: deserialise the stored plan and lower it (no search).
@@ -64,6 +87,13 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
     re-compiles against a warm engine prefer decompositions whose cut
     tensors already exist.  ``cutjoin_kernel=False`` keeps CutJoin on the
     XLA ``_join_reduce`` path (the kernel tier's oracle).
+
+    ``domains=True`` additionally emits FSM MINI-domain nodes per
+    pattern (one free-hom Möbius combination per automorphism orbit),
+    served by ``CompiledPlan.domains`` / ``.mini_support``; their
+    free-hom contractions CSE-merge with decomposition-join factors.  A
+    cached plan without domain nodes misses a ``domains=True`` lookup
+    (and recompiles); the converse hit is fine — domain nodes are lazy.
     """
     if isinstance(patterns, Pattern):
         patterns = (patterns,)
@@ -82,9 +112,12 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
         # a stored plan is only valid under the compile configuration
         # that selected it: candidate eligibility depends on budget and
         # max_cutjoin_cut, so a cross-config hit could return a plan the
-        # executor must refuse (PlanTooWide) — recompile instead
+        # executor must refuse (PlanTooWide) — recompile instead.  A
+        # domains=True request needs the domain nodes present; a plan
+        # that has them serves domain-less requests unchanged.
         if plan is not None and plan.meta.get("budget") == budget \
-                and plan.meta.get("max_cutjoin_cut") == max_cutjoin_cut:
+                and plan.meta.get("max_cutjoin_cut") == max_cutjoin_cut \
+                and (not domains or plan.meta.get("domains")):
             return lower(plan, graph, counter=counter,
                          use_pallas=use_pallas, from_cache=True,
                          budget=budget, cutjoin_kernel=cutjoin_kernel)
@@ -96,12 +129,18 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
         p, graph_n=graph.n, budget=budget,
         max_cutjoin_cut=max_cutjoin_cut)) for p in patterns]
     selections, total_cost = costing.select_candidates(
-        per_pattern, apct, graph.n, budget, counter=counter)
+        per_pattern, apct, graph.n, budget, counter=counter,
+        label_fracs=_label_fracs(patterns, graph))
     plan = frontend.assemble(selections)
+    if domains:
+        for p in patterns:
+            for node in frontend.domain_candidate(p).nodes:
+                plan.add(node)
     plan.meta.update({
         "key": key,
         "budget": budget,
         "max_cutjoin_cut": max_cutjoin_cut,
+        "domains": domains,
         "estimated_cost": total_cost,
         "styles": {pattern_key(p): cand.style for p, cand in selections},
         "cuts": {pattern_key(p): sorted(cand.cut) if cand.cut else None

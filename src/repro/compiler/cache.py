@@ -6,6 +6,8 @@ skips decomposition search and candidate costing entirely and goes
 straight to lowering.  The cache is two-tier: a process-local dict plus
 an optional on-disk directory of canonical-JSON plan files, so warmed
 plans survive across processes (and can be shipped with a deployment).
+The disk tier can be size-capped (``max_disk_entries``) with
+LRU-by-mtime eviction for long-lived serving hosts.
 """
 from __future__ import annotations
 
@@ -45,13 +47,22 @@ def plan_key(patterns: Iterable[Pattern], graph: Graph) -> str:
 
 
 class PlanCache:
-    """In-memory plan store with optional directory persistence."""
+    """In-memory plan store with optional directory persistence.
 
-    def __init__(self, path: Optional[str] = None):
+    ``max_disk_entries`` caps the on-disk tier with LRU-by-mtime
+    eviction: every successful disk read refreshes the entry's mtime,
+    and every put that overflows the cap unlinks the stalest files
+    (``evictions`` counts them).  The memory tier is never evicted —
+    it lives only as long as the process."""
+
+    def __init__(self, path: Optional[str] = None,
+                 max_disk_entries: Optional[int] = None):
         self.path = path
+        self.max_disk_entries = max_disk_entries
         self._mem: dict = {}
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
         if path:
             os.makedirs(path, exist_ok=True)
 
@@ -60,7 +71,8 @@ class PlanCache:
 
     def _load_disk(self, key: str) -> Optional[Plan]:
         """Parse the on-disk entry into the memory tier, or None for a
-        missing / truncated / stale-version file."""
+        missing / truncated / stale-version file.  A successful read
+        refreshes the file's mtime (LRU recency for eviction)."""
         f = self._file(key)
         if not os.path.exists(f):
             return None
@@ -70,11 +82,52 @@ class PlanCache:
         except (json.JSONDecodeError, KeyError, ValueError,
                 OSError):                  # corrupt entry: recompile
             return None
+        try:
+            os.utime(f)                    # mark recently used
+        except OSError:
+            pass
         self._mem[key] = plan
         return plan
 
+    def _evict(self):
+        """Unlink the stalest on-disk entries beyond the cap (LRU by
+        mtime).  Racing processes may unlink the same file — missing
+        files are skipped, not errors."""
+        if not self.path or self.max_disk_entries is None:
+            return
+        try:
+            files = [os.path.join(self.path, f)
+                     for f in os.listdir(self.path)
+                     if f.startswith("plan-") and f.endswith(".json")]
+        except OSError:
+            return
+        excess = len(files) - self.max_disk_entries
+        if excess <= 0:
+            return
+        def _mtime(f):
+            try:
+                return os.path.getmtime(f)
+            except OSError:
+                return 0.0
+        for f in sorted(files, key=_mtime)[:excess]:
+            try:
+                os.unlink(f)
+                self.evictions += 1
+            except OSError:
+                pass
+
     def get(self, key: str) -> Optional[Plan]:
         plan = self._mem.get(key)
+        if plan is not None and self.path \
+                and self.max_disk_entries is not None:
+            try:
+                # a memory-tier hit must still count as disk recency:
+                # without this a long-lived host's hottest plans (read
+                # from disk once, then served from _mem for hours) look
+                # stalest to the LRU and get evicted first
+                os.utime(self._file(key))
+            except OSError:
+                pass
         if plan is None and self.path:
             plan = self._load_disk(key)
         if plan is None:
@@ -99,6 +152,7 @@ class PlanCache:
             finally:
                 if os.path.exists(tmp):
                     os.unlink(tmp)
+            self._evict()
 
     def __contains__(self, key: str) -> bool:
         """Peek without touching hit/miss counters.  On-disk entries are
@@ -113,4 +167,4 @@ class PlanCache:
 
     def clear(self):
         self._mem.clear()
-        self.hits = self.misses = 0
+        self.hits = self.misses = self.evictions = 0

@@ -29,6 +29,15 @@ Two extensions of the shared pool:
   ``hom_memo``) extend the shared pool across cut choices *and* across
   compiles that reuse the engine (MiningEngine, the serving batcher), so
   costing prefers decompositions whose cut tensors already exist.
+
+Labelled contractions are priced with label selectivity: the APCT only
+profiles unlabelled skeletons (paper footnote 6), so the count-bound
+term of a label-masked contraction is the skeleton estimate scaled by
+the product of the pattern vertices' label frequencies (independence
+assumption) — label masks shrink the effective match count, not the
+dense-tile floor, which still streams full-N tiles.  ``label_fracs``
+(label -> vertex fraction of the bound graph) is threaded from
+``compile``.
 """
 from __future__ import annotations
 
@@ -41,17 +50,29 @@ from repro.core.decomposition import candidates as cut_candidates
 from repro.core.pattern import Pattern, clique
 from repro.compiler.frontend import Candidate
 from repro.compiler.ir import Contract, CutJoin, Intersect, MobiusCombine, \
-    ShrinkageCorrect
+    ShrinkageCorrect, free_skeleton
 
 DENSE_TILE = CM.DENSE_TILE
 
 
+def _label_selectivity(labels, label_fracs) -> float:
+    """Fraction of vertex tuples surviving the label mask: Π over the
+    (sub)pattern's vertices of their label's vertex frequency."""
+    if labels is None or not label_fracs:
+        return 1.0
+    s = 1.0
+    for l in labels:
+        s *= label_fracs.get(l, 0.0)
+    return s
+
+
 def _contract_cost(node: Contract, apct, n_vertices: int,
-                   budget: int) -> float:
-    # marker labels on free-hom patterns are not real labels: strip for
-    # the skeleton the APCT understands
-    q = Pattern(node.pattern.n, node.pattern.edges) if node.free \
-        else node.pattern
+                   budget: int, label_fracs=None) -> float:
+    # decode free-hom marker labels back to the real-labelled skeleton;
+    # the APCT itself understands only unlabelled skeletons (it strips
+    # labels on query), so labelled count bounds are the skeleton
+    # estimate scaled by label selectivity
+    q = free_skeleton(node.pattern) if node.free else node.pattern
     steps = H.frontier_sizes(q, node.order, free=node.free)
     total = 0.0
     done = set(node.free)
@@ -63,6 +84,7 @@ def _contract_cost(node: Contract, apct, n_vertices: int,
         sub = q.induced(sorted(done))
         cnt = (apct.query(sub) if sub.is_connected()
                else CM._disc(apct, q, done))
+        cnt *= _label_selectivity(sub.labels, label_fracs)
         floor = (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** width
         total += cnt + floor
     # free output tensor materialisation
@@ -78,17 +100,17 @@ def _materialised(node: Contract, counter) -> bool:
     if counter is None:
         return False
     if node.free:
-        skel = Pattern(node.pattern.n, node.pattern.edges)
-        return counter.has_free_tensor(skel, node.free)
+        return counter.has_free_tensor(free_skeleton(node.pattern),
+                                       node.free)
     return counter.has_hom(node.pattern)
 
 
 def node_cost(node, apct, n_vertices: int, budget: int = 1 << 27,
-              counter=None) -> float:
+              counter=None, label_fracs=None) -> float:
     if isinstance(node, Contract):
         if _materialised(node, counter):
             return 0.0
-        return _contract_cost(node, apct, n_vertices, budget)
+        return _contract_cost(node, apct, n_vertices, budget, label_fracs)
     if isinstance(node, Intersect):
         # ordered enumeration: linear scan + one unit per (approximate)
         # clique tuple
@@ -110,35 +132,39 @@ def node_cost(node, apct, n_vertices: int, budget: int = 1 << 27,
 
 def candidate_cost(cand: Candidate, apct, n_vertices: int,
                    shared: Dict[str, float], budget: int = 1 << 27,
-                   counter=None) -> float:
+                   counter=None, label_fracs=None) -> float:
     """Cost of one candidate given already-scheduled nodes (cost 0)."""
     total = 0.0
     for node in cand.nodes:
         if node.key in shared:
             continue
-        total += node_cost(node, apct, n_vertices, budget, counter)
+        total += node_cost(node, apct, n_vertices, budget, counter,
+                           label_fracs)
         if total == math.inf:
             return math.inf
     return total
 
 
 def commit(cand: Candidate, apct, n_vertices: int,
-           shared: Dict[str, float], budget: int = 1 << 27, counter=None):
+           shared: Dict[str, float], budget: int = 1 << 27, counter=None,
+           label_fracs=None):
     for node in cand.nodes:
         if node.key not in shared:
             shared[node.key] = node_cost(node, apct, n_vertices, budget,
-                                         counter)
+                                         counter, label_fracs)
 
 
 def select_candidates(per_pattern: List[Tuple[Pattern, List[Candidate]]],
                       apct, n_vertices: int,
-                      budget: int = 1 << 27, counter=None):
+                      budget: int = 1 << 27, counter=None,
+                      label_fracs=None):
     """Greedy joint selection over the application: for each pattern pick
     the cheapest candidate under the current shared pool, then commit its
     nodes.  Returns ([(pattern, winner)], total_cost).
 
     ``counter`` extends the pool with contractions the engine has already
-    materialised (see ``_materialised``)."""
+    materialised (see ``_materialised``); ``label_fracs`` prices label
+    masks (see ``_label_selectivity``)."""
     shared: Dict[str, float] = {}
     out = []
     total = 0.0
@@ -146,7 +172,7 @@ def select_candidates(per_pattern: List[Tuple[Pattern, List[Candidate]]],
         best, bc = None, math.inf
         for cand in cands:
             c = candidate_cost(cand, apct, n_vertices, shared, budget,
-                               counter)
+                               counter, label_fracs)
             if c < bc:
                 best, bc = cand, c
         if best is None:
@@ -157,7 +183,7 @@ def select_candidates(per_pattern: List[Tuple[Pattern, List[Candidate]]],
             out.append((p, cands[0]))
             total = math.inf
             continue
-        commit(best, apct, n_vertices, shared, budget, counter)
+        commit(best, apct, n_vertices, shared, budget, counter, label_fracs)
         out.append((p, best))
         total += bc
     return out, total

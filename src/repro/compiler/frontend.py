@@ -18,6 +18,21 @@ Two candidate styles exist per cutting set:
   corrected by ``ShrinkageCorrect`` over the shrinkage quotients.  Exact:
       inj(p) = Σ_{e_c} Π_i M_i(e_c) − Σ_σ mult(σ)·inj(p/σ)
   where σ ranges over cross-component merging partitions (§2.4).
+
+Vertex labels are a constraint, not an eligibility gate: labelled
+patterns generate the same candidate space.  Free-hom contractions pack
+the real vertex label with the cut-rank marker into one
+``LABEL_STRIDE``-encoded label (see ``core.pattern``), so the label mask
+is enforced inside each ``M_i`` factor — the one-hot indicators are
+idempotent under the CutJoin product — and quotients merging differently
+labelled vertices vanish exactly (they are dropped with the self-loop
+quotients).
+
+``domain_candidate`` emits the FSM tier: per automorphism orbit of a
+pattern, a vector-valued Möbius combination of single-free-vertex hom
+tensors (the compiled form of ``CountingEngine.inj_free``), in the same
+``homf:`` CSE namespace as the decomposition factors — sibling patterns
+in an FSM lattice level share their quotient tensors through it.
 """
 from __future__ import annotations
 
@@ -31,7 +46,8 @@ from repro.core.pattern import Pattern
 from repro.core.quotient import (mobius, partitions, quotient_terms,
                                  shrinkage_patterns)
 from repro.compiler.ir import (Contract, CutJoin, Intersect, MobiusCombine,
-                               Plan, ShrinkageCorrect, pattern_key)
+                               Plan, ShrinkageCorrect, domain_keys,
+                               mark_free, pattern_key)
 
 
 def _is_complete(q: Pattern) -> bool:
@@ -105,7 +121,11 @@ def _free_hom_terms(cand: Candidate, sub: Pattern,
                     cutpos: Tuple[int, ...]) -> tuple:
     """Möbius terms of M(e_c) for one subpattern: injective embedding
     count of ``sub`` as a tensor over its cut vertices, expanded over the
-    partitions of V(sub) keeping cut vertices in distinct blocks."""
+    partitions of V(sub) keeping cut vertices in distinct blocks.  Real
+    vertex labels ride along: ``mark_free`` packs them with the cut-rank
+    markers, quotients merging differently labelled vertices are dropped
+    (identically zero), and the surviving contractions enforce the label
+    mask inside each factor."""
     cutset = set(cutpos)
     acc: dict = {}
     for sigma in partitions(tuple(range(sub.n))):
@@ -113,17 +133,10 @@ def _free_hom_terms(cand: Candidate, sub: Pattern,
             continue                        # would pin two cut values equal
         q, blk = sub.quotient_with_map(sigma)
         if q is None:
-            continue                        # self-loop: zero on simple G
+            continue                        # self-loop / label clash: zero
         free_raw = tuple(blk[c] for c in cutpos)
-        # rank labels pin each cut axis through canonicalisation
-        lab = [0] * q.n
-        for rank, fv in enumerate(free_raw):
-            lab[fv] = rank + 1
-        ql = Pattern(q.n, q.edges, tuple(lab))
-        perm = ql.canonical_perm()
-        qc = ql.relabel(perm)
-        free_c = tuple(perm[fv] for fv in free_raw)
-        key = f"homf:{pattern_key(ql)}"
+        _, qc, free_c = mark_free(q, free_raw)
+        key = f"homf:{pattern_key(qc)}"
         order = H.greedy_plan(qc, free_c)
         node = Contract(key, qc, tuple(order), free_c)
         if key not in acc:
@@ -143,9 +156,10 @@ def decomposed_candidate(p: Pattern, cut: frozenset, *, graph_n: int,
                          budget: int = 1 << 27,
                          max_cut: int = 2) -> Optional[Candidate]:
     """CutJoin/ShrinkageCorrect plan for one cutting set, or None when
-    ineligible (labelled pattern, wide cut, or cut tensor over budget)."""
+    ineligible (wide cut, or cut tensor over budget).  Labelled patterns
+    decompose like unlabelled ones: labels live inside the factors."""
     k = len(cut)
-    if p.labels is not None or k > max_cut or graph_n ** k > budget:
+    if k > max_cut or graph_n ** k > budget:
         return None
     cand = Candidate(p, cut, "decomposed")
     factors = []
@@ -164,6 +178,24 @@ def decomposed_candidate(p: Pattern, cut: frozenset, *, graph_n: int,
     out = ShrinkageCorrect(f"cnt:{pattern_key(p)}:{cut_sig}", join_key,
                            tuple(corrections), divisor=p.aut_order())
     cand.out_key = cand._add(out)
+    return cand
+
+
+# -- FSM domain fragments ----------------------------------------------------------
+
+def domain_candidate(p: Pattern) -> Candidate:
+    """FSM MINI-domain fragment: one vector-valued Möbius combination per
+    automorphism orbit of the canonical form — the compiled equivalent of
+    ``CountingEngine.inj_free`` for every pattern vertex at once.
+    Vertices in one orbit share their domain, so only orbit
+    representatives materialise; the free-hom contractions live in the
+    same ``homf:`` namespace as decomposition-join factors and CSE-merge
+    with them and with sibling patterns' fragments."""
+    c = p.canonical()
+    cand = Candidate(c, None, "domains")
+    for key, rep in zip(domain_keys(c), (o[0] for o in c.vertex_orbits())):
+        terms = _free_hom_terms(cand, c, (rep,))
+        cand.out_key = cand._add(MobiusCombine(key, terms, divisor=1))
     return cand
 
 

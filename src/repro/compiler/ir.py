@@ -40,13 +40,21 @@ import json
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
-from repro.core.pattern import Pattern
+# LABEL_STRIDE / encode_free_label / free_skeleton / mark_free are part
+# of the IR contract for free-hom Contract nodes: their patterns carry
+# LABEL_STRIDE-packed labels combining the real vertex label with the
+# cut-rank marker pinning each free axis; lowering and costing decode
+# with ``free_skeleton`` (see core.pattern for the packing).
+from repro.core.pattern import (LABEL_STRIDE, Pattern, encode_free_label,
+                                free_skeleton, mark_free)
 
 Term = Tuple[float, str]                    # (coefficient, node key)
 
 # serialised-plan schema version; bump on any incompatible IR change so
 # on-disk caches written by older code miss cleanly (see Plan.from_dict)
-PLAN_FORMAT_VERSION = 2
+# v3: free-hom Contract patterns may carry LABEL_STRIDE-encoded vertex
+# labels (real label + cut-rank marker) — v2 readers would strip them
+PLAN_FORMAT_VERSION = 3
 
 
 # -- pattern (de)serialisation ---------------------------------------------------
@@ -57,6 +65,17 @@ def pattern_key(p: Pattern) -> str:
     bits, labels = c._code()
     lab = "" if not labels else ":" + ",".join(map(str, labels))
     return f"{c.n}.{bits}{lab}"
+
+
+def domain_keys(p: Pattern) -> tuple:
+    """Node keys of a pattern's FSM MINI-domain vectors, one per
+    automorphism orbit of the canonical form (orbit members share their
+    domain).  Key construction is the contract between the frontend
+    (which emits the nodes) and lowering (which looks them up): both
+    derive them from the pattern alone."""
+    c = p.canonical()
+    return tuple(f"dom:{pattern_key(c)}:{orbit[0]}"
+                 for orbit in c.vertex_orbits())
 
 
 def pattern_to_dict(p: Pattern) -> dict:
@@ -77,8 +96,10 @@ def pattern_from_dict(d: dict) -> Pattern:
 class Contract:
     """hom(pattern) by bucket elimination along ``order``.  Non-empty
     ``free`` keeps those vertices as output axes (axis order = tuple
-    order); the pattern's labels are then rank markers pinning the
-    canonical form, not real vertex labels."""
+    order); the pattern's labels are then ``LABEL_STRIDE`` encodings
+    packing the real vertex label (if the source pattern is labelled)
+    with the cut-rank marker that pins the canonical form — decode with
+    ``free_skeleton`` before contracting."""
     key: str
     pattern: Pattern
     order: Tuple[int, ...]

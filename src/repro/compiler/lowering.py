@@ -39,7 +39,8 @@ from repro.core.counting import CountingEngine
 from repro.core.pattern import Pattern, clique
 from repro.graph.storage import Graph
 from repro.compiler.ir import (Contract, CutJoin, Intersect, MobiusCombine,
-                               Plan, ShrinkageCorrect, pattern_key)
+                               Plan, ShrinkageCorrect, domain_keys,
+                               free_skeleton, pattern_key)
 
 
 @jax.jit
@@ -81,6 +82,26 @@ class CompiledPlan:
         key = self.plan.output_for(p)
         return lambda: float(self.value(key))
 
+    def domains(self, p: Pattern) -> dict:
+        """FSM MINI domain vectors of one pattern compiled with
+        ``domains=True``: canonical orbit-representative vertex -> (N,)
+        array counting injective maps sending that vertex to each graph
+        vertex.  Raises ``KeyError`` when the plan has no domain nodes
+        for ``p``."""
+        out = {}
+        for key in domain_keys(p):
+            if key not in self.plan.nodes:
+                raise KeyError(f"plan has no domain node {key!r} "
+                               f"(compiled without domains=True?)")
+            out[int(key.rsplit(":", 1)[1])] = np.asarray(self.value(key))
+        return out
+
+    def mini_support(self, p: Pattern) -> int:
+        """MINI support = min over pattern vertices of the domain size;
+        orbit representatives suffice (orbit members share domains)."""
+        return min(int(np.count_nonzero(dom > 0.5))
+                   for dom in self.domains(p).values())
+
     # -- evaluation --------------------------------------------------------------
     def value(self, key: str):
         if key in self._values:
@@ -95,7 +116,10 @@ class CompiledPlan:
     def _eval(self, node):
         if isinstance(node, Contract):
             if node.free:
-                skel = Pattern(node.pattern.n, node.pattern.edges)
+                # decode the marker-encoded pattern: strips cut-rank
+                # markers, restores real vertex labels (label-masked
+                # contraction on labelled patterns)
+                skel = free_skeleton(node.pattern)
                 return self.counter.hom_free_tensor(skel, node.free,
                                                     order=node.order)
             return self.counter.hom(node.pattern, order=node.order or None)

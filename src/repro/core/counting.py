@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core import homomorphism as H
 from repro.core.motifs import motif_patterns
-from repro.core.pattern import Pattern
+from repro.core.pattern import Pattern, free_skeleton, mark_free
 from repro.core.quotient import mobius, partitions, quotient_terms
 from repro.graph.storage import Graph
 
@@ -50,6 +50,7 @@ class CountingEngine:
                 if graph.labels is not None else None)
         self.hom_memo: dict = {}
         self.hom_free_memo: dict = {}
+        self.domain_memo: dict = {}
         self.stats = {"hom_evals": 0, "hom_hits": 0}
 
     # -- memo peeks (costing reads these to zero-cost materialised work) -------
@@ -66,9 +67,19 @@ class CountingEngine:
 
     # -- hom ------------------------------------------------------------------
     def _unary_for(self, p: Pattern):
-        if p.labels is None:
+        """Per-vertex label-indicator factors binding a labelled pattern
+        to this graph's label alphabet.  A pattern label outside the
+        alphabet binds to the zero vector (no such vertices => count 0),
+        so one compiled plan serves any graph whose alphabet covers —
+        or merely overlaps — the pattern's.  An unlabelled graph ignores
+        pattern labels (wildcard semantics, matching the brute-force
+        reference)."""
+        if p.labels is None or self.labels is None:
             return None
-        return {v: self.labels[l] for v, l in enumerate(p.labels)}
+        L = self.labels.shape[0]
+        zero = jnp.zeros_like(self.labels[0])
+        return {v: (self.labels[l] if 0 <= l < L else zero)
+                for v, l in enumerate(p.labels)}
 
     def hom(self, p: Pattern, order=None) -> float:
         c = p.canonical()
@@ -135,20 +146,38 @@ class CountingEngine:
     def inj_free(self, p: Pattern, v: int) -> np.ndarray:
         """Vector over graph vertices u: # injective maps with v -> u
         (pattern-vertex domains for FSM MINI support)."""
+        return self.inj_free_all(p)[v]
+
+    def inj_free_all(self, p: Pattern) -> np.ndarray:
+        """All FSM MINI domains of one pattern as a (p.n, N) matrix: row
+        v counts injective maps with v -> u.  One partition walk covers
+        every vertex (the old path re-walked per vertex), evaluating one
+        free-hom tensor per distinct (quotient, block); each tensor is
+        canonicalised (``mark_free``) into the ``hom_free_memo``, so
+        vertices sharing a block, symmetric vertices, and sibling
+        patterns sharing quotients all reuse the same contraction.  The
+        finished matrix memoises per pattern, so per-vertex ``inj_free``
+        loops pay the partition walk once."""
+        if p in self.domain_memo:
+            return self.domain_memo[p]
         n = self.graph.n
-        with self._x64():
-            total = jnp.zeros((n,),
-                              jnp.float64 if self.use_x64 else jnp.float32)
-            for sigma in partitions(tuple(range(p.n))):
-                q, blk = p.quotient_with_map(sigma)
-                if q is None:
-                    continue
-                mu = mobius(sigma)
-                vec = H.hom_count(q, self.A, free=(blk[v],),
-                                  unary=self._unary_for(q),
-                                  budget=self.budget)
-                total = total + mu * vec
-        return np.asarray(total)
+        dom = np.zeros((p.n, n))
+        for sigma in partitions(tuple(range(p.n))):
+            q, blk = p.quotient_with_map(sigma)
+            if q is None:
+                continue
+            mu = mobius(sigma)
+            vecs = {}
+            for b in set(blk.values()):
+                _, qc, free_c = mark_free(q, (b,))
+                vecs[b] = self.hom_free_tensor(
+                    free_skeleton(qc), free_c,
+                    order=H.greedy_plan(qc, free_c))
+            for v in range(p.n):
+                dom[v] += mu * vecs[blk[v]]
+        dom.setflags(write=False)          # shared memo: no silent writes
+        self.domain_memo[p] = dom
+        return dom
 
     def vind_inj_oracle(self, p: Pattern) -> float:
         """Vertex-induced injective tuples via complement factors: edges

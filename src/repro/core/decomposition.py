@@ -4,6 +4,11 @@ A decomposition of pattern p is a vertex cutting set V_C whose removal
 splits p into K >= 2 connected components; each component union V_C is a
 subpattern.  Cliques have no cutting set — the engine falls back to the
 direct (no-decomposition) plan, exactly the paper's fallback behaviour.
+
+Labels ride along: ``subpatterns`` extracts induced subpatterns with
+their vertex labels intact, while cutting sets themselves are a purely
+structural property, so labelled variants share one enumeration over
+the unlabelled skeleton.
 """
 from __future__ import annotations
 
@@ -16,7 +21,11 @@ from repro.core.pattern import Pattern
 @lru_cache(maxsize=50_000)
 def cutting_sets(p: Pattern) -> tuple:
     """All cutting sets (frozensets) of p, smallest first.  O(2^n) subsets,
-    fine for pattern-sized graphs."""
+    fine for pattern-sized graphs.  Cutting sets depend only on the edge
+    structure, so every labelled variant of one skeleton shares a single
+    cached enumeration."""
+    if p.labels is not None:
+        return cutting_sets(Pattern(p.n, p.edges))
     out = []
     verts = list(range(p.n))
     for size in range(1, p.n - 1):

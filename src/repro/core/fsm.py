@@ -1,18 +1,26 @@
-"""Frequent subgraph mining with MINI (minimum image-based) support.
+"""Frequent subgraph mining with MINI (minimum image-based) support —
+level-wise, compiled.
 
 Support of a labelled pattern = min over pattern vertices of the number of
 distinct graph vertices appearing at that position across all embeddings
 (paper §3, Fig 16).  MINI satisfies the downward closure property, so the
 search grows patterns one edge at a time and prunes infrequent ones.
 
-Domains come from the tensor fast path: inj_free(p, v) > 0 marks the
-domain of vertex v — the vectorised equivalent of the UDF in Fig 15 (a
-UDF-path cross-check lives in tests/test_engine.py).
+Each lattice level is evaluated *jointly*: the whole candidate frontier
+goes through one ``compiler.compile(frontier, graph, domains=True)``
+call, so sibling patterns sharing a parent CSE-merge their quotient
+free-hom contractions (one ``homf:`` node pool per level), domain
+vectors materialise once per automorphism orbit, and the plan cache
+serves repeated runs.  The fallback path (``use_compiler=False``, or any
+compile/execute failure) computes domains with one vectorised
+``inj_free_all`` call per pattern — a single partition walk covering
+every vertex, memoised through the shared engine — instead of the old
+per-vertex ``inj_free`` expansions.
 """
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -26,14 +34,16 @@ class FSMResult:
     frequent: dict                    # canonical pattern -> support
     evaluated: int = 0
     pruned: int = 0
+    levels: int = 0
+    compiled_levels: int = 0          # levels served by a compiled plan
+    fallbacks: int = 0                # levels that fell back to inj_free_all
 
 
 def mini_support(counter: CountingEngine, p: Pattern) -> int:
-    sup = counter.graph.n
-    for v in range(p.n):
-        dom = counter.inj_free(p, v)
-        sup = min(sup, int(np.count_nonzero(dom > 0.5)))
-    return sup
+    """Fallback MINI support: one vectorised domain matrix per pattern
+    (``inj_free_all``), min over the per-vertex nonzero counts."""
+    dom = counter.inj_free_all(p)
+    return int(np.count_nonzero(dom > 0.5, axis=1).min())
 
 
 def _seed_patterns(g: Graph) -> list:
@@ -63,25 +73,75 @@ def _extensions(p: Pattern, labels: range) -> list:
     return list(out)
 
 
+def _level_supports(g: Graph, level: list, counter: CountingEngine,
+                    apct, plan_cache, res: FSMResult,
+                    support_fn) -> dict:
+    """MINI supports for one candidate frontier.  ``apct`` not None =>
+    compile the frontier jointly (domain plans, cross-sibling CSE, plan
+    cache); on failure — or with the compiler disabled — every pattern
+    falls back to ``support_fn`` over the shared engine."""
+    if apct is not None:
+        try:
+            from repro import compiler
+            # no caller-provided cache => compile uncached: frontier
+            # pattern sets essentially never repeat across runs, so
+            # feeding the process-global cache would only grow it
+            cp = compiler.compile(tuple(level), g, apct=apct,
+                                  counter=counter,
+                                  cache=plan_cache if plan_cache is not None
+                                  else False,
+                                  domains=True)
+            supports = {p: cp.mini_support(p) for p in level}
+            res.compiled_levels += 1
+            return supports
+        except Exception:
+            res.fallbacks += 1
+    return {p: support_fn(counter, p) for p in level}
+
+
 def fsm(g: Graph, min_support: int, max_vertices: int = 3,
         max_edges: int | None = None,
-        counter: CountingEngine | None = None) -> FSMResult:
-    """Level-wise FSM with downward-closure pruning."""
+        counter: CountingEngine | None = None, *,
+        use_compiler: bool = True, apct=None, plan_cache=None,
+        support_fn=mini_support) -> FSMResult:
+    """Level-wise FSM with downward-closure pruning.
+
+    ``use_compiler`` routes every lattice level through one joint
+    ``compiler.compile(..., domains=True)``; ``apct`` / ``plan_cache``
+    are shared across levels (a small-sample APCT is profiled on
+    demand).  Without an explicit ``plan_cache`` levels compile uncached
+    — frontier sets rarely repeat, and write-once entries would bloat
+    the process cache; pass a ``PlanCache`` to persist plans across
+    repeated runs over the same graph.  ``support_fn(counter, p)``
+    serves the non-compiled path — the bench swaps in the legacy
+    per-vertex expansion for comparison.
+    """
     assert g.labels is not None, "FSM requires a labelled graph"
     counter = counter or CountingEngine(g)
+    if use_compiler and apct is None:
+        from repro.core.apct import APCT
+        apct = APCT(g, num_samples=4096)   # one profile, every level
+    elif not use_compiler:
+        apct = None
     labels = range(g.num_labels)
     res = FSMResult({})
-    frontier = []
-    for p in _seed_patterns(g):
-        res.evaluated += 1
-        s = mini_support(counter, p)
-        if s >= min_support:
-            res.frequent[p.canonical()] = s
-            frontier.append(p.canonical())
-    seen = set(res.frequent)
-    while frontier:
+    level = [p.canonical() for p in _seed_patterns(g)]
+    seen = set(level)
+    while level:
+        res.levels += 1
+        res.evaluated += len(level)
+        supports = _level_supports(g, level, counter, apct, plan_cache,
+                                   res, support_fn)
+        survivors = []
+        for p in level:
+            s = supports[p]
+            if s >= min_support:
+                res.frequent[p] = s
+                survivors.append(p)
+            else:
+                res.pruned += 1
         nxt = []
-        for p in frontier:
+        for p in survivors:
             for q in _extensions(p, labels):
                 if q in seen:
                     continue
@@ -90,12 +150,6 @@ def fsm(g: Graph, min_support: int, max_vertices: int = 3,
                     continue
                 if max_edges is not None and q.m > max_edges:
                     continue
-                res.evaluated += 1
-                s = mini_support(counter, q)
-                if s >= min_support:
-                    res.frequent[q] = s
-                    nxt.append(q)
-                else:
-                    res.pruned += 1
-        frontier = nxt
+                nxt.append(q)
+        level = nxt
     return res

@@ -221,6 +221,29 @@ class Pattern:
     def aut_order(self) -> int:
         return len(self.automorphisms())
 
+    def vertex_orbits(self) -> list:
+        """Vertex orbits under the automorphism group (sorted tuples,
+        sorted by first member).  Vertices in one orbit are exchangeable
+        — in particular their FSM MINI domains coincide, so domain plans
+        only materialise one representative per orbit."""
+        parent = list(range(self.n))
+
+        def find(v):
+            while parent[v] != v:
+                parent[v] = parent[parent[v]]
+                v = parent[v]
+            return v
+
+        for perm in self.automorphisms():
+            for v, w in enumerate(perm):
+                a, b = find(v), find(w)
+                if a != b:
+                    parent[max(a, b)] = min(a, b)
+        groups: dict = {}
+        for v in range(self.n):
+            groups.setdefault(find(v), []).append(v)
+        return sorted(tuple(sorted(g)) for g in groups.values())
+
 
 @lru_cache(maxsize=100_000)
 def _canonical_impl(n, edges, labels):
@@ -230,6 +253,55 @@ def _canonical_impl(n, edges, labels):
 
 def _canonical_cached(p: Pattern) -> Pattern:
     return _canonical_impl(p.n, p.edges, p.labels)
+
+
+# -- free-vertex marking --------------------------------------------------------
+#
+# Free-hom tensors (hom with some vertices kept as output axes) need a
+# canonical identity that pins the free axes: two (pattern, free-vertex)
+# pairs are interchangeable iff an isomorphism maps one onto the other
+# *respecting both real labels and free positions*.  Both properties are
+# packed into one int label per vertex:
+#
+#     unlabelled pattern:  marker                 (0 = bound, k = k-th free)
+#     labelled pattern:    (label+1)*STRIDE + marker
+#
+# Labelled encodings are >= LABEL_STRIDE, unlabelled stay below it, and
+# markers never reach the stride (patterns have <= ~8 vertices), so the
+# packing is injective and decodable.  ``CountingEngine`` and the
+# compiler's free-hom Contract nodes share this scheme, which is what
+# lets their (pattern, free) memo keys coincide.
+
+LABEL_STRIDE = 16
+
+
+def encode_free_label(label, marker: int) -> int:
+    assert 0 <= marker < LABEL_STRIDE
+    return marker if label is None else (label + 1) * LABEL_STRIDE + marker
+
+
+def free_skeleton(p: "Pattern") -> "Pattern":
+    """Invert the marking: strip markers, restore real labels (if any)."""
+    if p.labels is None or max(p.labels) < LABEL_STRIDE:
+        return Pattern(p.n, p.edges)
+    return Pattern(p.n, p.edges,
+                   tuple(l // LABEL_STRIDE - 1 for l in p.labels))
+
+
+def mark_free(p: "Pattern", free: tuple):
+    """Canonicalise a (pattern, free-vertex) pair: returns
+    ``(marked, canonical, free_c)`` — the marker-encoded pattern, its
+    canonical form, and the free vertices' canonical positions (in rank
+    order).  Isomorphic pairs (labels and free positions respected) map
+    to identical results."""
+    lab = [encode_free_label(p.labels[v] if p.labels else None, 0)
+           for v in range(p.n)]
+    for rank, fv in enumerate(free):
+        lab[fv] = encode_free_label(p.labels[fv] if p.labels else None,
+                                    rank + 1)
+    marked = Pattern(p.n, p.edges, tuple(lab))
+    perm = marked.canonical_perm()
+    return marked, marked.relabel(perm), tuple(perm[fv] for fv in free)
 
 
 # -- common patterns -----------------------------------------------------------

@@ -14,6 +14,14 @@ Quotients with self-loops (merging adjacent vertices) have zero counts on
 simple graphs and are dropped.  Quotients are deduplicated by canonical
 form, which is exactly the paper's cross-pattern computation reuse: all
 112 6-motif patterns share a small pool of quotient hom computations.
+
+Labelled patterns are first-class: ``Pattern.quotient_with_map`` refuses
+to merge vertices with different labels (such a quotient has zero hom /
+inj count on a vertex-labelled graph, exactly like a self-loop), and
+surviving quotients carry the merged labels, so every identity above —
+including ``shrinkage_patterns`` multiplicities — holds verbatim on
+labelled inputs.  The dropped terms are all identically zero, never
+approximations.
 """
 from __future__ import annotations
 

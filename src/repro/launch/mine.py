@@ -56,6 +56,9 @@ def main(argv=None):
                     help="legacy per-pattern engine path (no plan IR)")
     ap.add_argument("--plan-cache", default=None, metavar="DIR",
                     help="persist compiled plans in DIR across runs")
+    ap.add_argument("--plan-cache-entries", type=int, default=None,
+                    metavar="N", help="cap the on-disk plan store at N "
+                    "entries (LRU-by-mtime eviction)")
     args = ap.parse_args(argv)
 
     if args.app == "fsm" and args.labels == 0:
@@ -67,7 +70,8 @@ def main(argv=None):
     plan_cache = None
     if args.plan_cache:
         from repro.compiler import PlanCache
-        plan_cache = PlanCache(args.plan_cache)
+        plan_cache = PlanCache(args.plan_cache,
+                               max_disk_entries=args.plan_cache_entries)
 
     if args.app == "motif":
         pats = motif_patterns(args.k)
@@ -107,9 +111,11 @@ def main(argv=None):
         for k in range(3, args.k + 1):
             print(f"  K{k} exists: {eng.pattern_exists(clique(k))}")
     elif args.app == "fsm":
-        r = fsm(g, args.support, max_vertices=args.k if args.k >= 2 else 3)
+        r = fsm(g, args.support, max_vertices=args.k if args.k >= 2 else 3,
+                use_compiler=not args.no_compiler, plan_cache=plan_cache)
         print(f"  frequent patterns: {len(r.frequent)} "
-              f"(evaluated {r.evaluated}, pruned {r.pruned})")
+              f"(evaluated {r.evaluated}, pruned {r.pruned}; "
+              f"{r.compiled_levels}/{r.levels} levels compiled)")
         for p, s in sorted(r.frequent.items(),
                            key=lambda t: (-t[1], t[0].n))[:10]:
             print(f"    support {s}: n={p.n} edges={sorted(p.edges)} "

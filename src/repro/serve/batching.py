@@ -133,10 +133,14 @@ class ContinuousBatcher:
 @dataclass
 class PatternRequest:
     """One mining query: count every pattern of ``patterns`` in the
-    batcher's graph (edge-induced)."""
+    batcher's graph (edge-induced), or — with ``support=True`` — their
+    FSM MINI supports (labelled patterns, served off the same compiled
+    plan via its domain nodes)."""
     uid: int
     patterns: tuple
+    support: bool = False               # MINI support instead of counts
     counts: dict = field(default_factory=dict)
+    supports: dict = field(default_factory=dict)
     from_cache: bool = False
     done: bool = False
     error: bool = False                 # served neither compiled nor direct
@@ -146,10 +150,13 @@ class PatternQueryBatcher:
     """Compile-once-execute-many serving loop for pattern counts.
 
     Queued requests are drained up to ``max_batch`` per step and grouped
-    by canonical pattern-set signature; each group compiles (or cache-
-    hits) one joint plan and executes it for every request in the group.
-    A shared ``CountingEngine`` keeps the hom memo warm across plans, so
-    even distinct pattern sets reuse overlapping quotient contractions.
+    by (canonical pattern-set signature, support flag); each group
+    compiles (or cache-hits) one joint plan and executes it for every
+    request in the group.  Labelled patterns ride the same path —
+    decomposition joins included — and ``support=True`` requests are
+    served off the plan's MINI-domain nodes.  A shared
+    ``CountingEngine`` keeps the hom memo warm across plans, so even
+    distinct pattern sets reuse overlapping quotient contractions.
     """
 
     def __init__(self, graph, *, cache=None, apct=None, max_batch: int = 8):
@@ -169,12 +176,14 @@ class PatternQueryBatcher:
     def submit(self, req: PatternRequest):
         self.queue.append(req)
 
-    def _plan_for(self, sig: str, patterns: tuple):
-        """CompiledPlan for one group, memoised per signature so repeat
-        steps reuse the lowered plan (and its node-value memo) instead of
-        re-lowering on every plan-cache hit.  None when compilation
-        fails — callers serve the group via the direct path."""
-        cp = self._plans.get(sig)
+    def _plan_for(self, sig, patterns: tuple, domains: bool):
+        """CompiledPlan for one group, memoised per (signature, domains)
+        so repeat steps reuse the lowered plan (and its node-value memo)
+        instead of re-lowering on every plan-cache hit.  None when
+        compilation fails — callers serve the group via the direct
+        path.  ``domains`` compiles MINI-domain nodes for support
+        queries."""
+        cp = self._plans.get((sig, domains))
         if cp is not None:
             self.stats["cache_hits"] += 1
             return cp
@@ -185,26 +194,35 @@ class PatternQueryBatcher:
             self.apct = APCT(self.graph)       # one profile, all compiles
         try:
             cp = compiler.compile(patterns, self.graph, apct=self.apct,
-                                  counter=self.counter, cache=self.cache)
+                                  counter=self.counter, cache=self.cache,
+                                  domains=domains)
         except Exception:
             return None
         self.stats["cache_hits" if cp.from_cache else "compiles"] += 1
-        self._plans[sig] = cp
+        self._plans[(sig, domains)] = cp
         return cp
 
     def _serve(self, req: PatternRequest, cp):
         """Fill one request: compiled plan first, legacy direct second;
         a request is always finished, never silently dropped."""
+        from repro.core.fsm import mini_support
         try:
-            if cp is not None:
-                req.counts = {p: cp.count(p) for p in req.patterns}
-                req.from_cache = cp.from_cache
-            else:
+            if cp is None:
                 raise RuntimeError("no compiled plan")
+            if req.support:
+                req.supports = {p: cp.mini_support(p)
+                                for p in req.patterns}
+            else:
+                req.counts = {p: cp.count(p) for p in req.patterns}
+            req.from_cache = cp.from_cache
         except Exception:
             try:                        # e.g. PlanTooWide at execution
-                req.counts = {p: self.counter.edge_induced(p)
-                              for p in req.patterns}
+                if req.support:
+                    req.supports = {p: mini_support(self.counter, p)
+                                    for p in req.patterns}
+                else:
+                    req.counts = {p: self.counter.edge_induced(p)
+                                  for p in req.patterns}
                 req.from_cache = False
                 self.stats["fallbacks"] += 1
             except Exception:
@@ -221,10 +239,11 @@ class PatternQueryBatcher:
                  for _ in range(min(self.max_batch, len(self.queue)))]
         groups: dict = {}
         for req in batch:
-            groups.setdefault(patterns_signature(req.patterns),
-                              []).append(req)
-        for sig, reqs in groups.items():
-            cp = self._plan_for(sig, reqs[0].patterns)
+            groups.setdefault(
+                (patterns_signature(req.patterns), req.support),
+                []).append(req)
+        for (sig, support), reqs in groups.items():
+            cp = self._plan_for(sig, reqs[0].patterns, support)
             for req in reqs:
                 self._serve(req, cp)
         self.stats["steps"] += 1

@@ -1,0 +1,264 @@
+"""Labelled decomposition end-to-end: quotient/shrinkage exactness,
+compiler decomposition-join plans for labelled patterns, level-wise FSM
+equivalence, domain plans, plan-cache eviction."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro import compiler
+from repro.compiler import frontend, lowering
+from repro.compiler.cache import PlanCache, plan_key
+from repro.compiler.ir import (CutJoin, ShrinkageCorrect, domain_keys,
+                               free_skeleton, pattern_key)
+from repro.core.counting import CountingEngine, brute_force_edge_induced
+from repro.core.decomposition import cutting_sets
+from repro.core.fsm import fsm, mini_support
+from repro.core.pattern import Pattern, chain, mark_free, tailed_triangle
+from repro.graph.generators import erdos_renyi, triangle_rich
+
+GL = triangle_rich(30, 4, seed=3, num_labels=2)
+
+LABELLED = [
+    Pattern(3, [(0, 1), (1, 2)], (0, 1, 0)),
+    Pattern(4, [(0, 1), (1, 2), (0, 2), (2, 3)], (0, 1, 0, 1)),
+    Pattern(4, [(0, 1), (1, 2), (2, 3)], (1, 0, 0, 1)),
+    Pattern(5, [(0, 1), (1, 2), (2, 3), (3, 0), (0, 4)], (0, 0, 1, 1, 0)),
+]
+
+
+@pytest.fixture(scope="module")
+def eng():
+    return CountingEngine(GL)
+
+
+# -- canonical keys hash labels (golden lock) --------------------------------------
+
+def test_pattern_key_hashes_labels():
+    """Same skeleton, different labels => different CSE keys; labelled
+    isomorphs => one key.  This is what keeps labelled and unlabelled
+    quotients from colliding in the shared pool."""
+    skel = chain(3)
+    k0 = pattern_key(skel)
+    k1 = pattern_key(Pattern(3, skel.edges, (0, 1, 0)))
+    k2 = pattern_key(Pattern(3, skel.edges, (1, 0, 1)))
+    assert len({k0, k1, k2}) == 3
+    # isomorphic relabelling of vertices (labels carried): same key
+    p = Pattern(3, [(0, 1), (1, 2)], (0, 1, 0))
+    q = Pattern(3, [(2, 1), (1, 0)], (0, 1, 0))
+    assert pattern_key(p) == pattern_key(q)
+
+
+def test_mark_free_roundtrip_labels():
+    """mark_free packs real labels with cut-rank markers; free_skeleton
+    restores them exactly."""
+    p = Pattern(4, [(0, 1), (1, 2), (2, 3)], (1, 0, 0, 1))
+    marked, qc, free_c = mark_free(p, (1, 3))
+    assert len(free_c) == 2
+    skel = free_skeleton(qc)
+    assert skel.edges == qc.edges
+    assert sorted(skel.labels) == sorted(p.labels)
+    # unlabelled patterns keep the pre-existing marker-only encoding
+    u = chain(4)
+    _, uc, ufree = mark_free(u, (0,))
+    assert max(uc.labels) < 16 and free_skeleton(uc).labels is None
+
+
+# -- labelled quotients / shrinkage exactness --------------------------------------
+
+@pytest.mark.parametrize("p", LABELLED)
+def test_labelled_decomposed_candidates_exact(eng, p):
+    """CutJoin/ShrinkageCorrect plans are exact for every cutting set of
+    every labelled pattern: labelled shrinkage multiplicities and
+    label-masked factors reproduce brute force."""
+    want = brute_force_edge_induced(GL, p)
+    checked = 0
+    for cut in cutting_sets(p):
+        cand = frontend.decomposed_candidate(p, cut, graph_n=GL.n)
+        if cand is None:
+            continue
+        plan = frontend.assemble([(p, cand)])
+        got = lowering.lower(plan, GL, counter=eng).count(p)
+        assert abs(got - want) < 1e-6, (p, sorted(cut))
+        checked += 1
+    assert checked >= 1                    # the gate is gone
+
+
+def test_labelled_pattern_compiles_to_decomposition_join(eng):
+    """Acceptance: a labelled >= 4-vertex pattern compiles to a
+    decomposition-join plan (not the direct Möbius fallback) and its
+    count matches brute force exactly."""
+    p = Pattern(4, [(0, 1), (1, 2), (0, 2), (2, 3)], (0, 1, 0, 1))
+    cp = compiler.compile((p,), GL, cache=False, counter=eng)
+    assert cp.plan.meta["styles"][pattern_key(p)] == "decomposed"
+    ops = cp.plan.op_counts()
+    assert ops.get("CutJoin", 0) >= 1 and ops.get("ShrinkageCorrect", 0) >= 1
+    assert cp.count(p) == brute_force_edge_induced(GL, p)
+
+
+def test_labelled_shrinkage_property():
+    """Property test (hypothesis): labelled shrinkage multiplicities
+    reproduce brute-force injective counts on random labelled graphs,
+    for every eligible cutting set."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    skeletons = [tailed_triangle(), chain(4),
+                 Pattern(4, [(0, 1), (1, 2), (2, 3), (3, 0)])]
+
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           si=st.integers(0, len(skeletons) - 1),
+           labs=st.lists(st.integers(0, 1), min_size=4, max_size=4))
+    def check(seed, si, labs):
+        g = erdos_renyi(14, 3.0, seed=seed, num_labels=2)
+        p = Pattern(4, skeletons[si].edges, tuple(labs))
+        eng = CountingEngine(g)
+        want = brute_force_edge_induced(g, p)
+        for cut in cutting_sets(p):
+            cand = frontend.decomposed_candidate(p, cut, graph_n=g.n)
+            if cand is None:
+                continue
+            plan = frontend.assemble([(p, cand)])
+            got = lowering.lower(plan, g, counter=eng).count(p)
+            assert abs(got - want) < 1e-6, (tuple(labs), sorted(cut))
+
+    check()
+
+
+def test_labelled_quotients_merge_same_label_only():
+    """Quotient construction refuses label-conflicting merges and
+    carries merged labels."""
+    p = Pattern(3, [(0, 1), (1, 2)], (0, 1, 0))
+    q, m = p.quotient_with_map([[0, 2], [1]])
+    assert q is not None and sorted(q.labels) == [0, 1]
+    bad, _ = p.quotient_with_map([[0, 1], [2]])
+    assert bad is None                    # adjacent AND label conflict
+    conflict, _ = Pattern(3, [(0, 1)], (0, 1, 1)).quotient_with_map(
+        [[0, 2], [1]])
+    assert conflict is None               # non-adjacent, labels differ
+
+
+# -- domains / FSM -----------------------------------------------------------------
+
+def test_domain_plan_matches_direct(eng):
+    pats = tuple(LABELLED[:3])
+    cp = compiler.compile(pats, GL, cache=False, counter=eng, domains=True)
+    for p in pats:
+        assert cp.mini_support(p) == mini_support(eng, p), p
+        doms = cp.domains(p)
+        c = p.canonical()
+        assert set(doms) == {o[0] for o in c.vertex_orbits()}
+        for rep, dom in doms.items():
+            ref = eng.inj_free(c, rep)
+            assert np.allclose(dom, ref), (p, rep)
+
+
+def test_domain_plan_cse_across_siblings():
+    """Sibling patterns sharing a parent share free-hom contractions:
+    the joint domain plan is smaller than the sum of individual ones."""
+    sibs = [Pattern(3, [(0, 1), (1, 2)], (0, 0, l)) for l in (0, 1)] + \
+           [Pattern(3, [(0, 1), (1, 2), (0, 2)], (0, 0, l)) for l in (0, 1)]
+    joint = compiler.compile(tuple(sibs), GL, cache=False,
+                             domains=True).plan
+    separate = sum(len(compiler.compile((p,), GL, cache=False,
+                                        domains=True).plan.nodes)
+                   for p in sibs)
+    assert len(joint.nodes) < separate
+
+
+def test_fsm_compiled_matches_direct_two_labels():
+    """Level-wise compiled FSM == direct fallback FSM on a 2-label
+    graph (frequent sets and supports identical)."""
+    g = erdos_renyi(32, 4.0, seed=9, num_labels=2)
+    r_c = fsm(g, min_support=3, max_vertices=3)
+    r_d = fsm(g, min_support=3, max_vertices=3, use_compiler=False)
+    assert r_c.frequent == r_d.frequent
+    assert r_c.compiled_levels == r_c.levels and r_c.fallbacks == 0
+    assert r_d.compiled_levels == 0
+    assert len(r_c.frequent) > 0
+
+
+def test_inj_free_all_matches_per_vertex(eng):
+    for p in LABELLED[:2]:
+        dom = eng.inj_free_all(p)
+        assert dom.shape == (p.n, GL.n)
+        for v in range(p.n):
+            # reference: independent expansion (pre-batching semantics)
+            from repro.core import homomorphism as H
+            from repro.core.quotient import mobius, partitions
+            ref = np.zeros(GL.n)
+            for sigma in partitions(tuple(range(p.n))):
+                q, blk = p.quotient_with_map(sigma)
+                if q is None:
+                    continue
+                ref += mobius(sigma) * np.asarray(
+                    H.hom_count(q, eng.A, free=(blk[v],),
+                                unary=eng._unary_for(q)), np.float64)
+            assert np.allclose(dom[v], ref), (p, v)
+
+
+def test_batcher_serves_support_requests(eng):
+    from repro.serve.batching import PatternQueryBatcher, PatternRequest
+    b = PatternQueryBatcher(GL, max_batch=4)
+    pats = (LABELLED[0], LABELLED[1])
+    for i in range(4):
+        b.submit(PatternRequest(uid=i, patterns=pats, support=(i % 2 == 0)))
+    b.run_to_completion()
+    assert len(b.finished) == 4
+    for req in b.finished:
+        assert req.done and not req.error
+        if req.support:
+            assert req.supports == {p: mini_support(eng, p) for p in pats}
+        else:
+            for p in pats:
+                assert abs(req.counts[p] - eng.edge_induced(p)) < 1e-6
+
+
+def test_domains_cache_interplay():
+    """domains=True misses a domain-less cached plan and recompiles; the
+    richer plan then serves domain-less lookups from cache."""
+    cache = PlanCache()
+    pats = (LABELLED[0],)
+    cp1 = compiler.compile(pats, GL, cache=cache)
+    assert not cp1.plan.meta["domains"]
+    cp2 = compiler.compile(pats, GL, cache=cache, domains=True)
+    assert not cp2.from_cache                 # no domain nodes: recompile
+    cp3 = compiler.compile(pats, GL, cache=cache)
+    assert cp3.from_cache                     # superset plan serves counts
+    cp4 = compiler.compile(pats, GL, cache=cache, domains=True)
+    assert cp4.from_cache
+    assert cp4.mini_support(pats[0]) == cp2.mini_support(pats[0])
+
+
+# -- plan cache eviction -----------------------------------------------------------
+
+def test_plan_cache_disk_lru_eviction(tmp_path):
+    """A 3-entry store overflows: stalest entries (by mtime, refreshed
+    on read) are evicted, newest survive, and the evictions stat counts
+    them."""
+    import os
+    import time
+    cache = PlanCache(str(tmp_path), max_disk_entries=3)
+    sets = [(chain(4),), (chain(5),), (tailed_triangle(),),
+            (chain(4), chain(5))]
+    keys = [plan_key(s, GL) for s in sets]
+    now = time.time()
+    for i, s in enumerate(sets[:3]):
+        compiler.compile(s, GL, cache=cache)
+        # stagger mtimes deterministically: sets[0] is stalest
+        os.utime(cache._file(keys[i]), (now - 100 + i, now - 100 + i))
+    assert cache.evictions == 0
+    # reading entry 0 refreshes its recency: entry 1 becomes stalest
+    fresh = PlanCache(str(tmp_path), max_disk_entries=3)
+    assert fresh.get(keys[0]) is not None
+    compiler.compile(sets[3], GL, cache=fresh)     # 4th entry: overflow
+    assert fresh.evictions == 1
+    on_disk = set(os.listdir(tmp_path))
+    assert f"plan-{keys[1]}.json" not in on_disk   # LRU victim
+    for k in (keys[0], keys[2], keys[3]):
+        assert f"plan-{k}.json" in on_disk
+    # victim misses on a cold instance; survivors hit
+    cold = PlanCache(str(tmp_path))
+    assert cold.get(keys[1]) is None
+    assert cold.get(keys[0]) is not None
