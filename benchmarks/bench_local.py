@@ -1,0 +1,107 @@
+"""Partial-embedding API timings: local counts off the decomposition
+join vs the routes that rebuild them.
+
+Regimes per (pattern, graph) cell:
+
+  direct    — the flat Möbius anchored route (one inj_free expansion per
+              anchor, the route a system without decomposition reuse
+              pays), fresh engine;
+  compiled  — ``compiler.compile(local=True)`` once, then every anchored
+              vector and the full local tensor read off the plan
+              (repeat-query regime: plan + node-value memos warm);
+  kernel    — the |cut| = 2 keep-axis Pallas reduce vs the XLA
+              mask-and-sum on synthetic integer factors (the raw kernel
+              tier the anchored path routes through).
+
+``--smoke`` runs one tiny configuration (CI) and writes
+``benchmarks/results/BENCH_local.json`` either way.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import emit, save_json, timeit
+from repro.core.counting import CountingEngine
+from repro.core.pattern import Pattern, chain, cycle, tailed_triangle
+from repro.graph import generators as gen
+
+
+def _direct_all_anchors(g, p):
+    eng = CountingEngine(g)
+    from repro.api import local_counts
+    return [local_counts(p, g, anchor=o[0], counter=eng,
+                         use_compiler=False).counts
+            for o in p.vertex_orbits()]
+
+
+def _compiled_all_anchors(cp, p):
+    return [cp.local_counts(p, o[0]) for o in p.vertex_orbits()]
+
+
+def _cell(g, gname, p, pname):
+    from repro import compiler
+    dt_d, vecs_d = timeit(_direct_all_anchors, g, p)
+    cp = compiler.compile((p,), g, counter=CountingEngine(g),
+                          cache=False, local=True)
+    dt_c, vecs_c = timeit(_compiled_all_anchors, cp, p, warmup=True)
+    for a, b in zip(vecs_d, vecs_c):
+        assert np.array_equal(a, b), "regimes disagree"
+    tag = f"local/{gname}/{pname}"
+    emit(f"{tag}/direct", dt_d * 1e6, f"orbits={len(vecs_d)}")
+    emit(f"{tag}/compiled", dt_c * 1e6,
+         f"speedup={dt_d / max(dt_c, 1e-12):.1f}x")
+
+
+def _kernel_cell(n: int, k: int):
+    from repro.kernels import ops
+    rng = np.random.default_rng(n + k)
+    Fs = [rng.integers(0, 5, size=(n, n)).astype(np.float64)
+          for _ in range(k)]
+
+    def xla(Fs):
+        prod = np.ones((n, n))
+        for F in Fs:
+            prod *= F
+        np.fill_diagonal(prod, 0.0)
+        return prod.sum(axis=1)
+
+    dt_k, out_k = timeit(ops.cutjoin_reduce_keep, Fs, keep=0, warmup=True)
+    dt_x, out_x = timeit(xla, Fs)
+    assert np.array_equal(out_k, out_x), "kernel vs host disagree"
+    emit(f"local/keep-kernel/n{n}/f{k}", dt_k * 1e6,
+         f"host={dt_x * 1e6:.1f}us")
+
+
+def run(scale: str = "small"):
+    if scale == "smoke":
+        graphs = {"cs-like": gen.triangle_rich(256, 12, seed=1)}
+        kernel_ns = [256]
+    else:
+        graphs = {"cs-like": gen.triangle_rich(1200, 40, seed=1),
+                  "wk-like": gen.erdos_renyi(1500, 14.0, seed=2)}
+        kernel_ns = [512, 1024, 2048]
+    pats = {"4-chain": chain(4), "tailed-tri": tailed_triangle(),
+            "5-cycle": cycle(5)}
+    for gname, g in graphs.items():
+        for pname, p in pats.items():
+            _cell(g, gname, p, pname)
+    for n in kernel_ns:
+        _kernel_cell(n, 2)
+
+
+def main():
+    from benchmarks.common import RESULTS
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny configuration (CI)")
+    ap.add_argument("--scale", default="small")
+    args = ap.parse_args()
+    start = len(RESULTS)
+    run("smoke" if args.smoke else args.scale)
+    save_json("local", start)
+
+
+if __name__ == "__main__":
+    main()

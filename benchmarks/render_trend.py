@@ -1,0 +1,109 @@
+"""Render the perf trajectory across commits from BENCH_*.json files.
+
+CI uploads ``benchmarks/results/BENCH_<suite>.json`` per commit as a
+build artifact; download a few artifact directories next to each other
+(or point ``--root`` at any tree containing them) and this renders one
+markdown table per suite — rows are benchmark names, columns are
+snapshots in commit/mtime order, cells are µs/call — plus an ASCII
+sparkline and the delta between the first and last snapshot, so a
+regression reads directly off the table.
+
+    python -m benchmarks.render_trend                      # results/ only
+    python -m benchmarks.render_trend --root artifacts/    # many commits
+    python -m benchmarks.render_trend --out TREND.md
+
+Snapshots are grouped by the directory that holds them (one directory =
+one commit's artifact) and ordered by file mtime; dependency-free on
+purpose — it must run in CI and on laptops alike.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+SPARK = "▁▂▃▄▅▆▇█"
+
+
+def load_snapshots(root: pathlib.Path):
+    """{suite: [(snapshot label, {name: us_per_call})]} — one snapshot
+    per (directory, suite) file, ordered oldest first by mtime."""
+    files = sorted(root.rglob("BENCH_*.json"),
+                   key=lambda f: f.stat().st_mtime)
+    suites: dict = {}
+    for f in files:
+        try:
+            d = json.loads(f.read_text())
+            rows = {r["name"]: float(r["us_per_call"])
+                    for r in d["rows"]}
+            suite = d.get("suite", f.stem.replace("BENCH_", ""))
+        except (json.JSONDecodeError, KeyError, TypeError, ValueError):
+            continue                        # torn/foreign file: skip
+        label = f.parent.name if f.parent != root else "results"
+        suites.setdefault(suite, []).append((label, rows))
+    return suites
+
+
+def sparkline(values) -> str:
+    vals = [v for v in values if v is not None]
+    if len(vals) < 2:
+        return ""
+    lo, hi = min(vals), max(vals)
+    span = (hi - lo) or 1.0
+    return "".join(" " if v is None else
+                   SPARK[int((v - lo) / span * (len(SPARK) - 1))]
+                   for v in values)
+
+
+def render_suite(suite: str, snapshots) -> list:
+    labels = [lab for lab, _ in snapshots]
+    names: list = []
+    for _, rows in snapshots:
+        for n in rows:
+            if n not in names:
+                names.append(n)
+    out = [f"## {suite}", ""]
+    out.append("| name | " + " | ".join(labels) + " | trend | Δ |")
+    out.append("|" + "---|" * (len(labels) + 3))
+    for n in names:
+        vals = [rows.get(n) for _, rows in snapshots]
+        cells = ["" if v is None else f"{v:,.1f}" for v in vals]
+        present = [v for v in vals if v is not None]
+        delta = ""
+        if len(present) >= 2 and present[0]:
+            delta = f"{(present[-1] / present[0] - 1) * 100:+.0f}%"
+        out.append(f"| {n} | " + " | ".join(cells) +
+                   f" | {sparkline(vals)} | {delta} |")
+    out.append("")
+    return out
+
+
+def render(root: pathlib.Path) -> str:
+    suites = load_snapshots(root)
+    lines = ["# Benchmark trend (µs/call, lower is better)", ""]
+    if not suites:
+        lines.append(f"_no BENCH_*.json found under {root}_")
+    for suite in sorted(suites):
+        lines.extend(render_suite(suite, suites[suite]))
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=None,
+                    help="tree to scan for BENCH_*.json "
+                    "(default: benchmarks/results)")
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="also write the markdown to FILE")
+    args = ap.parse_args(argv)
+    root = pathlib.Path(args.root) if args.root else \
+        pathlib.Path(__file__).parent / "results"
+    text = render(root)
+    print(text, end="")
+    if args.out:
+        pathlib.Path(args.out).write_text(text)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ listing (Fig 13).
 import sys
 sys.path.insert(0, "src")
 
+from repro.api import exists
 from repro.core.engine import MiningEngine
 from repro.core.pattern import Pattern, chain, clique, cycle
 from repro.graph.generators import small_world
@@ -13,10 +14,14 @@ from repro.graph.generators import small_world
 graph = small_world(500, 6, 0.2, seed=3)
 app = MiningEngine(graph)
 
-# --- existence queries ---------------------------------------------------
+# --- existence queries (partial-embedding fast path) ----------------------
+# api.exists evaluates the decomposition factors one subpattern at a
+# time: an all-zero factor decides False before the join or any
+# shrinkage correction runs (the early exit); a positive local entry
+# decides True.
 for p, name in [(clique(3), "triangle"), (clique(5), "K5"),
                 (cycle(5), "C5"), (chain(6), "6-chain")]:
-    print(f"{name} exists: {app.pattern_exists(p)}")
+    print(f"{name} exists: {exists(p, graph, counter=app.counter)}")
 
 # --- Fig 13: count everything, materialise only the first 100 -----------
 pattern = Pattern(4, [(0, 1), (1, 2), (2, 3)])    # 4-chain

@@ -1,0 +1,8 @@
+"""Partial-embedding API (paper §5): local counts, anchored vectors,
+early-exit existence, and per-vertex counts read off the decomposition
+join's cut tensors — see ``repro.api.local`` for the full story."""
+from repro.api.local import (LocalCounts, exists, local_counts,
+                             pattern_domains, vertex_counts)
+
+__all__ = ["LocalCounts", "local_counts", "exists", "vertex_counts",
+           "pattern_domains"]

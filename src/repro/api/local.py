@@ -1,0 +1,240 @@
+"""Partial-embedding API: local counts off the decomposition join.
+
+The paper's second headline contribution (§5) is an API that exposes
+*per-partial-embedding* information while preserving the advantages of
+pattern decomposition: systems that materialise full embeddings pay the
+whole enumeration to answer any localised question, whereas the
+decomposition join already holds every answer in its cut tensors — the
+factor product *before* the final Σ_{e_c} reduce is exactly the table of
+completion counts per cut-vertex assignment.  This module reads that
+table instead of rebuilding it:
+
+``local_counts(p, g)``            the local tensor over the chosen
+                                  cutting set: entry e_c = # injective
+                                  maps of ``p`` pinning the cut to e_c.
+``local_counts(p, g, anchor=v)``  the (N,) anchored vector: completion
+                                  counts with pattern vertex v pinned to
+                                  each graph vertex (v is forced into
+                                  the cutting set when one contains it;
+                                  flat Möbius otherwise).
+``exists(p, g)``                  early-exit existence: an all-zero
+                                  factor tensor decides False before the
+                                  join or shrinkage corrections run.
+``vertex_counts(p, g)``           orbit-weighted per-vertex counts: entry
+                                  u = # edge-induced embeddings of ``p``
+                                  containing graph vertex u (Σ over
+                                  orbits of |orbit| · anchored / |Aut|).
+``pattern_domains(counter, p)``   FSM MINI domains per orbit
+                                  representative through the same route
+                                  (the decomposed domain path the count
+                                  plans' cut tensors already feed).
+
+All entry points compile through ``repro.compiler`` (plan cache, CSE
+with the count plans) and fall back to an uncached direct assembly over
+a shared ``CountingEngine`` when compilation is unavailable or fails.
+Counts are exact integers (f64 end to end, f32 kernel chunks only under
+the proven-exact guard).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.counting import CountingEngine
+from repro.core.pattern import Pattern
+from repro.graph.storage import Graph
+
+
+@dataclass
+class LocalCounts:
+    """One partial-embedding answer: ``counts[e_c]`` is the number of
+    injective maps of ``pattern`` sending the cut vertices (``axes``, in
+    ascending order) to e_c — or, when ``anchor`` is set, ``counts[u]``
+    is the completion count with the anchor pinned to graph vertex u
+    (then ``axes == (anchor,)``).  Unanchored tensors are computed on
+    ``pattern.canonical()`` and ``axes`` name *canonical-form* vertices:
+    the answer is shared across isomorphic renumberings, so it must be
+    expressed in the one numbering every caller can reconstruct (map
+    back through ``pattern.canonical_perm()``).  ``style`` records the
+    route taken (``local`` = decomposition join, ``local-direct`` =
+    flat Möbius fallback)."""
+    pattern: Pattern
+    anchor: Optional[int]
+    axes: Optional[tuple]               # cut vertices backing each axis
+    counts: np.ndarray
+    style: str = "local"
+    from_cache: bool = False
+
+    def total(self) -> float:
+        """Σ over assignments = inj(pattern) (injective tuple count)."""
+        return float(self.counts.sum())
+
+
+def _compile_local(pattern: Pattern, graph: Graph, *, counter, cache,
+                   apct=None, budget: int = 1 << 27):
+    from repro import compiler
+    return compiler.compile((pattern,), graph, counter=counter,
+                            cache=cache, apct=apct, budget=budget,
+                            local=True)
+
+
+def _direct_plan(pattern: Pattern, graph: Graph, anchor: Optional[int],
+                 budget: int):
+    """Uncompiled fallback: assemble the cheapest-by-construction local
+    fragment directly (smallest eligible cutting set — containing the
+    anchor when set — else the flat Möbius route for anchored queries).
+    Returns (plan, out_key, cut, style) or None when no unanchored
+    tensor exists (cliques).  Unanchored fragments build on the
+    canonical form (same axis semantics as the compiled path)."""
+    from repro.compiler import frontend
+    from repro.compiler.ir import Plan
+    from repro.core.decomposition import cutting_sets
+    if anchor is None:
+        pattern = pattern.canonical()
+    cand = None
+    for cut in sorted(cutting_sets(pattern), key=len):
+        if anchor is not None and anchor not in cut:
+            continue
+        cand = frontend.local_candidate(pattern, cut, graph_n=graph.n,
+                                        anchor=anchor, budget=budget)
+        if cand is not None:
+            break
+    if cand is None:
+        if anchor is None:
+            return None
+        cand = frontend.anchored_direct_candidate(pattern, anchor)
+    plan = Plan()
+    for node in cand.nodes:
+        plan.add(node)
+    return plan, cand.out_key, cand.cut, cand.style
+
+
+def local_counts(pattern: Pattern, graph: Graph, *,
+                 anchor: Optional[int] = None,
+                 counter: Optional[CountingEngine] = None,
+                 cache=None, apct=None, use_compiler: bool = True,
+                 budget: int = 1 << 27) -> LocalCounts:
+    """Per-partial-embedding completion counts (see module docstring).
+
+    ``counter`` shares hom/free-hom memos with other queries; ``cache``
+    follows ``compiler.compile`` semantics (None = process cache,
+    False = uncached).  ``use_compiler=False`` — or any compile
+    failure — takes the direct assembly path over the shared engine.
+    Raises ``ValueError`` for an unanchored query on a pattern without
+    an eligible cutting set (cliques: every vertex pair is adjacent, so
+    no local tensor exists — anchored queries still work)."""
+    if anchor is not None and not (0 <= anchor < pattern.n):
+        raise ValueError(f"anchor {anchor} outside pattern vertices")
+    counter = counter or CountingEngine(graph, budget=budget)
+    if use_compiler:
+        try:
+            cp = _compile_local(pattern, graph, counter=counter,
+                                cache=cache, apct=apct, budget=budget)
+            from repro.compiler.ir import local_key
+            key = local_key(pattern, anchor)
+            if cp.has_local(pattern, anchor):
+                cut = cp.plan.meta.get("local_cuts", {}).get(key)
+                axes = ((anchor,) if anchor is not None
+                        else tuple(cut) if cut else None)
+                return LocalCounts(pattern, anchor, axes,
+                                   cp.local_counts(pattern, anchor),
+                                   style=("local" if cut
+                                          else "local-direct"),
+                                   from_cache=cp.from_cache)
+            if anchor is None:
+                raise ValueError(
+                    f"{pattern!r} has no eligible cutting set: no "
+                    f"unanchored local tensor (anchored queries work)")
+        except ValueError:
+            raise
+        except Exception:
+            pass                        # direct assembly takes over
+    from repro.compiler import lowering
+    built = _direct_plan(pattern, graph, anchor, budget)
+    if built is None:
+        raise ValueError(
+            f"{pattern!r} has no eligible cutting set: no unanchored "
+            f"local tensor (anchored queries work)")
+    plan, out_key, cut, style = built
+    cp = lowering.lower(plan, graph, counter=counter, budget=budget)
+    arr = np.asarray(cp.value(out_key), np.float64)
+    axes = ((anchor,) if anchor is not None
+            else tuple(sorted(cut)) if cut else None)
+    return LocalCounts(pattern, anchor, axes, arr, style=style)
+
+
+def exists(pattern: Pattern, graph: Graph, *,
+           counter: Optional[CountingEngine] = None, cache=None,
+           apct=None, use_compiler: bool = True,
+           budget: int = 1 << 27) -> bool:
+    """Pattern existence with the partial-embedding early exit: factor
+    tensors evaluate per subpattern, and any all-zero factor decides
+    False before the join or shrinkage corrections run.  Falls back to
+    the engine's scalar existence when no local plan is available."""
+    counter = counter or CountingEngine(graph, budget=budget)
+    if use_compiler:
+        try:
+            cp = _compile_local(pattern, graph, counter=counter,
+                                cache=cache, apct=apct, budget=budget)
+            return cp.exists(pattern)
+        except Exception:
+            pass
+    try:
+        lc = local_counts(pattern, graph, counter=counter,
+                          use_compiler=False, budget=budget)
+        return bool(np.max(lc.counts) > 0.5)
+    except ValueError:                  # no cutting set (cliques)
+        return counter.existence(pattern)
+
+
+def vertex_counts(pattern: Pattern, graph: Graph, *,
+                  counter: Optional[CountingEngine] = None, cache=None,
+                  apct=None, use_compiler: bool = True,
+                  budget: int = 1 << 27) -> np.ndarray:
+    """Orbit-weighted per-vertex embedding counts: entry u is the number
+    of edge-induced embeddings of ``pattern`` containing graph vertex u.
+    One anchored vector per automorphism orbit suffices (orbit members
+    share their vector); weighting by |orbit| counts each embedding once
+    per pattern position it gives u, and /|Aut| collapses tuple
+    multiplicity — so Σ_u vertex_counts[u] = n_p · inj(p) / |Aut|."""
+    counter = counter or CountingEngine(graph, budget=budget)
+    total = np.zeros(graph.n)
+    if use_compiler:
+        try:
+            # one compile serves every orbit: the plan registers all
+            # anchored outputs, and its node-value/factor memos are
+            # shared across the orbit reads
+            cp = _compile_local(pattern, graph, counter=counter,
+                                cache=cache, apct=apct, budget=budget)
+            for orbit in pattern.vertex_orbits():
+                total += len(orbit) * cp.local_counts(pattern, orbit[0])
+            return total / pattern.aut_order()
+        except Exception:
+            total[:] = 0.0              # per-orbit direct path takes over
+    for orbit in pattern.vertex_orbits():
+        lc = local_counts(pattern, graph, anchor=orbit[0],
+                          counter=counter, cache=cache, apct=apct,
+                          use_compiler=False, budget=budget)
+        total += len(orbit) * lc.counts
+    return total / pattern.aut_order()
+
+
+def pattern_domains(counter: CountingEngine, p: Pattern) -> dict:
+    """FSM MINI domains {orbit representative -> (N,) vector} through
+    the partial-embedding route: anchored local counts ride the
+    decomposition join (reusing cut tensors the engine already holds)
+    instead of the flat Möbius free-hom expansion; any failure falls
+    back to the engine's vectorised ``inj_free_all``.  Values equal
+    ``counter.inj_free(p, rep)`` exactly — the anchored vector *is* the
+    domain."""
+    reps = [o[0] for o in p.vertex_orbits()]
+    try:
+        return {rep: local_counts(p, counter.graph, anchor=rep,
+                                  counter=counter,
+                                  use_compiler=False).counts
+                for rep in reps}
+    except Exception:
+        dom = counter.inj_free_all(p)
+        return {rep: np.asarray(dom[rep]) for rep in reps}

@@ -45,11 +45,11 @@ from repro.graph.storage import Graph
 from repro.compiler import cache as _cache_mod
 from repro.compiler import costing, frontend
 from repro.compiler.cache import PlanCache, plan_key
-from repro.compiler.ir import Plan, pattern_key
+from repro.compiler.ir import Plan, local_key, pattern_key
 from repro.compiler.lowering import CompiledPlan, lower
 
 __all__ = ["compile", "Plan", "PlanCache", "CompiledPlan", "pattern_key",
-           "plan_key", "default_cache"]
+           "plan_key", "local_key", "default_cache"]
 
 _DEFAULT_CACHE = PlanCache()
 
@@ -69,11 +69,75 @@ def _label_fracs(patterns, graph):
     return {l: counts[l] / max(graph.n, 1) for l in range(graph.num_labels)}
 
 
+def _add_local_outputs(plan, patterns, graph, apct, budget, counter,
+                       label_fracs, max_cutjoin_cut):
+    """Partial-embedding outputs for every pattern: the unanchored local
+    tensor (cheapest eligible cutting set, absent for cliques) plus one
+    anchored vector per automorphism orbit (decomposed when a cut
+    contains the orbit, flat Möbius otherwise).  Candidates are priced
+    against the committed count plan's node pool, so local plans
+    preferentially ride the cut tensors the counts already materialise
+    — partial embeddings off the decomposition join, not a second
+    pipeline."""
+    import math as _math
+    from repro.compiler.ir import local_key as _lk
+    shared = {k: 0.0 for k in plan.nodes}
+    local_cuts = {}
+
+    def pick(cands):
+        best, bc = None, _math.inf
+        for cand in cands:
+            c = costing.candidate_cost(cand, apct, graph.n, shared, budget,
+                                       counter, label_fracs)
+            if c < bc:
+                best, bc = cand, c
+        if best is None and cands:
+            # every candidate prices infinite (the width estimate is an
+            # upper bound — free axes are unioned into every step even
+            # when the actual einsum never touches them): keep the last
+            # candidate (anchored: the flat Möbius fallback) so the
+            # output exists, but do NOT commit its nodes to the shared
+            # pool — mirroring select_candidates, execution chunks or
+            # raises PlanTooWide and callers fall back.
+            best = cands[-1]
+            for node in best.nodes:
+                plan.add(node)
+            return best
+        if best is not None:
+            costing.commit(best, apct, graph.n, shared, budget, counter,
+                           label_fracs)
+            for node in best.nodes:
+                plan.add(node)
+        return best
+
+    for p in patterns:
+        # the unanchored tensor is built on the CANONICAL form: its key
+        # collapses isomorphic renumberings, so the axes must refer to a
+        # numbering every caller can reconstruct (canonical vertices) —
+        # compiling on the caller's instance would serve cached tensors
+        # whose axis attribution is wrong for any other renumbering
+        pc = p.canonical()
+        cand = pick(frontend.local_candidates(pc, graph_n=graph.n,
+                                              budget=budget,
+                                              max_cut=max_cutjoin_cut))
+        if cand is not None:
+            plan.set_local_output(pc, cand.out_key)
+            local_cuts[_lk(pc)] = sorted(cand.cut)
+        for orbit in p.vertex_orbits():
+            cand = pick(frontend.local_candidates(
+                p, graph_n=graph.n, anchor=orbit[0], budget=budget,
+                max_cut=max_cutjoin_cut))
+            plan.set_local_output(p, cand.out_key, anchor=orbit[0])
+            local_cuts[_lk(p, orbit[0])] = (sorted(cand.cut)
+                                            if cand.cut else None)
+    plan.meta["local_cuts"] = local_cuts
+
+
 def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
             apct=None, counter=None, cache: Optional[PlanCache] = None,
             budget: int = 1 << 27, max_cutjoin_cut: int = 2,
             use_pallas: bool = False, cutjoin_kernel: bool = True,
-            domains: bool = False) -> CompiledPlan:
+            domains: bool = False, local: bool = False) -> CompiledPlan:
     """Compile a pattern (or application pattern set) for one graph.
 
     Cache hit: deserialise the stored plan and lower it (no search).
@@ -94,6 +158,14 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
     free-hom contractions CSE-merge with decomposition-join factors.  A
     cached plan without domain nodes misses a ``domains=True`` lookup
     (and recompiles); the converse hit is fine — domain nodes are lazy.
+
+    ``local=True`` additionally emits partial-embedding outputs (the
+    paper's §5 API): per pattern, the unanchored local-count tensor over
+    its cheapest eligible cutting set plus one anchored vector per
+    automorphism orbit, served by ``CompiledPlan.local_counts`` /
+    ``.exists``.  Local candidates are priced against the committed
+    count plan, so they reuse its cut tensors; the same lazy-superset
+    cache rule as ``domains`` applies.
     """
     if isinstance(patterns, Pattern):
         patterns = (patterns,)
@@ -116,11 +188,19 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
         # domains=True request needs the domain nodes present; a plan
         # that has them serves domain-less requests unchanged.
         if plan is not None and plan.meta.get("budget") == budget \
-                and plan.meta.get("max_cutjoin_cut") == max_cutjoin_cut \
-                and (not domains or plan.meta.get("domains")):
-            return lower(plan, graph, counter=counter,
-                         use_pallas=use_pallas, from_cache=True,
-                         budget=budget, cutjoin_kernel=cutjoin_kernel)
+                and plan.meta.get("max_cutjoin_cut") == max_cutjoin_cut:
+            if (not domains or plan.meta.get("domains")) \
+                    and (not local or plan.meta.get("local")):
+                return lower(plan, graph, counter=counter,
+                             use_pallas=use_pallas, from_cache=True,
+                             budget=budget, cutjoin_kernel=cutjoin_kernel)
+            # config matches but the stored plan lacks a requested
+            # flavor: recompile with the UNION of requested and stored
+            # flags, so the overwrite supersets the entry instead of
+            # ping-ponging between domains-only and local-only plans on
+            # alternating request kinds
+            domains = domains or bool(plan.meta.get("domains"))
+            local = local or bool(plan.meta.get("local"))
 
     if apct is None:
         from repro.core.apct import APCT
@@ -128,19 +208,24 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
     per_pattern = [(p, frontend.pattern_candidates(
         p, graph_n=graph.n, budget=budget,
         max_cutjoin_cut=max_cutjoin_cut)) for p in patterns]
+    label_fracs = _label_fracs(patterns, graph)
     selections, total_cost = costing.select_candidates(
         per_pattern, apct, graph.n, budget, counter=counter,
-        label_fracs=_label_fracs(patterns, graph))
+        label_fracs=label_fracs)
     plan = frontend.assemble(selections)
     if domains:
         for p in patterns:
             for node in frontend.domain_candidate(p).nodes:
                 plan.add(node)
+    if local:
+        _add_local_outputs(plan, patterns, graph, apct, budget, counter,
+                           label_fracs, max_cutjoin_cut)
     plan.meta.update({
         "key": key,
         "budget": budget,
         "max_cutjoin_cut": max_cutjoin_cut,
         "domains": domains,
+        "local": local,
         "estimated_cost": total_cost,
         "styles": {pattern_key(p): cand.style for p, cand in selections},
         "cuts": {pattern_key(p): sorted(cand.cut) if cand.cut else None

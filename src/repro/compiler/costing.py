@@ -49,8 +49,8 @@ from repro.core import homomorphism as H
 from repro.core.decomposition import candidates as cut_candidates
 from repro.core.pattern import Pattern, clique
 from repro.compiler.frontend import Candidate
-from repro.compiler.ir import Contract, CutJoin, Intersect, MobiusCombine, \
-    ShrinkageCorrect, free_skeleton
+from repro.compiler.ir import Contract, CutJoin, Intersect, LocalCount, \
+    MobiusCombine, ShrinkageCorrect, free_skeleton
 
 DENSE_TILE = CM.DENSE_TILE
 
@@ -125,6 +125,20 @@ def node_cost(node, apct, n_vertices: int, budget: int = 1 << 27,
         return join * max(len(node.factors), 1)
     if isinstance(node, ShrinkageCorrect):
         return float(len(node.corrections) + 1)
+    if isinstance(node, LocalCount):
+        # the partial-embedding join: the factor-product streaming cost
+        # matches CutJoin's kernel tier (|cut| <= 2 by construction), but
+        # the output is a tensor over the kept axes, not a scalar — a
+        # reduce-free join (keep == all axes) pays its materialisation,
+        # which is what steers anchored queries to keep-axis plans when
+        # both exist.  Corrections add one streamed tensor each.
+        out_elems = n_vertices ** len(node.keep)
+        if out_elems > 4 * budget:
+            return math.inf                  # output itself too wide
+        join = (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** node.cut_size
+        out = (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** len(node.keep)
+        return join * max(len(node.factors), 1) + out \
+            + float(len(node.corrections))
     if isinstance(node, MobiusCombine):
         return float(len(node.terms))
     raise TypeError(type(node))

@@ -44,10 +44,11 @@ from repro.core import homomorphism as H
 from repro.core.decomposition import cutting_sets, subpatterns
 from repro.core.pattern import Pattern
 from repro.core.quotient import (mobius, partitions, quotient_terms,
-                                 shrinkage_patterns)
-from repro.compiler.ir import (Contract, CutJoin, Intersect, MobiusCombine,
-                               Plan, ShrinkageCorrect, domain_keys,
-                               mark_free, pattern_key)
+                                 shrinkage_patterns,
+                                 shrinkage_quotients_with_maps)
+from repro.compiler.ir import (Contract, CutJoin, Intersect, LocalCount,
+                               MobiusCombine, Plan, ShrinkageCorrect,
+                               domain_keys, mark_free, pattern_key)
 
 
 def _is_complete(q: Pattern) -> bool:
@@ -179,6 +180,89 @@ def decomposed_candidate(p: Pattern, cut: frozenset, *, graph_n: int,
                            tuple(corrections), divisor=p.aut_order())
     cand.out_key = cand._add(out)
     return cand
+
+
+# -- partial-embedding (local-count) candidates ------------------------------------
+
+def local_candidate(p: Pattern, cut: frozenset, *, graph_n: int,
+                    anchor: Optional[int] = None, budget: int = 1 << 27,
+                    max_cut: int = 2) -> Optional[Candidate]:
+    """Partial-embedding plan for one cutting set: the decomposition join
+    *without* the final reduce.  The output tensor's axis j indexes the
+    assignment of the j-th smallest cut vertex; entry e_c is the exact
+    number of injective maps of ``p`` pinning the cut to e_c.  With
+    ``anchor`` (a cut vertex) only that axis survives — the other cut
+    axes are summed away (the keep-axis kernel tier) and the shrinkage
+    corrections are emitted anchored at the anchor alone, so they stay
+    vector-sized.  None when ineligible (wide cut, over-budget tensor,
+    or anchor outside the cut)."""
+    k = len(cut)
+    if k > min(max_cut, 2) or graph_n ** k > budget:
+        return None
+    if anchor is not None and anchor not in cut:
+        return None
+    cand = Candidate(p, cut, "local")
+    factors = []
+    for sub, vmap in subpatterns(p, cut):
+        cutpos = tuple(vmap[c] for c in sorted(cut))
+        terms = _free_hom_terms(cand, sub, cutpos)
+        if not terms:
+            return None
+        factors.append(terms)
+    cut_list = sorted(cut)
+    keep = (tuple(range(k)) if anchor is None
+            else (cut_list.index(anchor),))
+    keep_verts = tuple(cut_list[j] for j in keep)
+    # anchored shrinkage corrections: Σ_σ inj(p/σ ; keep vertices pinned)
+    # as one flat Möbius combination over the kept axes.  Individual
+    # partitions (not deduped canonical quotients) because each one pins
+    # the cut image through its own vertex map; _free_hom_terms then
+    # canonicalises the underlying contractions, so repeats CSE-merge.
+    corr_acc: dict = {}
+    for q, blk in shrinkage_quotients_with_maps(p, cut):
+        qpos = tuple(blk[c] for c in keep_verts)
+        for coeff, key in _free_hom_terms(cand, q, qpos):
+            corr_acc[key] = corr_acc.get(key, 0.0) + coeff
+    corrections = tuple((c, key) for key, c in sorted(corr_acc.items())
+                        if c != 0)
+    cut_sig = "-".join(map(str, cut_list))
+    keep_sig = "-".join(map(str, keep))
+    out = LocalCount(f"loc:{pattern_key(p)}:{cut_sig}:k{keep_sig}",
+                     k, keep, tuple(factors), corrections)
+    cand.out_key = cand._add(out)
+    return cand
+
+
+def anchored_direct_candidate(p: Pattern, anchor: int) -> Candidate:
+    """Anchored fallback without a decomposition: the flat Möbius
+    expansion of inj(p ; anchor ↦ u) over single-free-vertex hom tensors
+    (the compiled form of ``CountingEngine.inj_free``).  Always exists —
+    the route for cliques and other patterns whose cutting sets miss the
+    anchor — and shares the ``homf:`` namespace with domain fragments."""
+    cand = Candidate(p, None, "local-direct")
+    terms = _free_hom_terms(cand, p, (anchor,))
+    _, qc, _ = mark_free(p, (anchor,))
+    cand.out_key = cand._add(
+        MobiusCombine(f"locd:{pattern_key(qc)}", terms, divisor=1))
+    return cand
+
+
+def local_candidates(p: Pattern, *, graph_n: int,
+                     anchor: Optional[int] = None, budget: int = 1 << 27,
+                     max_cut: int = 2) -> List[Candidate]:
+    """Candidate space for one partial-embedding output.  Unanchored:
+    one ``local`` candidate per eligible cutting set (possibly empty —
+    cliques have no local tensor).  Anchored: cutting sets containing
+    the anchor, plus the always-available flat Möbius fallback."""
+    out = []
+    for cut in cutting_sets(p):
+        cand = local_candidate(p, cut, graph_n=graph_n, anchor=anchor,
+                               budget=budget, max_cut=max_cut)
+        if cand is not None:
+            out.append(cand)
+    if anchor is not None:
+        out.append(anchored_direct_candidate(p, anchor))
+    return out
 
 
 # -- FSM domain fragments ----------------------------------------------------------

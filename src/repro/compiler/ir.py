@@ -27,6 +27,18 @@ Ops
                       vertex collisions, paper §2.4) from a ``CutJoin``
                       value and divides by |Aut|: the decomposed form of
                       an edge-induced embedding count.
+``LocalCount``        the partial-embedding output (paper §5): the CutJoin
+                      factor product *without* the final Σ_{e_c} reduce —
+                      a tensor over cut-vertex assignments whose entry at
+                      e_c is the number of injective maps of the whole
+                      pattern sending the cutting set to e_c.  ``keep``
+                      selects which cut axes survive: all of them is the
+                      reduce-free local tensor, a single axis is an
+                      anchored vector (every other cut axis summed away).
+                      ``corrections`` are anchored shrinkage terms — flat
+                      Möbius combinations of free-hom tensors over the
+                      kept axes — subtracted entrywise, so every entry is
+                      exact, not just the global sum.
 
 Every op is a frozen dataclass with a ``to_dict``/``from_dict`` pair;
 ``Plan`` serialises to canonical JSON so cached plans survive processes.
@@ -54,7 +66,10 @@ Term = Tuple[float, str]                    # (coefficient, node key)
 # on-disk caches written by older code miss cleanly (see Plan.from_dict)
 # v3: free-hom Contract patterns may carry LABEL_STRIDE-encoded vertex
 # labels (real label + cut-rank marker) — v2 readers would strip them
-PLAN_FORMAT_VERSION = 3
+# v4: LocalCount nodes (partial-embedding outputs) + "loc:"-prefixed
+# entries in Plan.outputs — v3 readers would strip-and-serve them as
+# count plans, so they must miss instead
+PLAN_FORMAT_VERSION = 4
 
 
 # -- pattern (de)serialisation ---------------------------------------------------
@@ -76,6 +91,29 @@ def domain_keys(p: Pattern) -> tuple:
     c = p.canonical()
     return tuple(f"dom:{pattern_key(c)}:{orbit[0]}"
                  for orbit in c.vertex_orbits())
+
+
+def local_key(p: Pattern, anchor: Optional[int] = None) -> str:
+    """Output-table key of a pattern's partial-embedding (local-count)
+    result.  Anchored keys canonicalise through ``mark_free``, so every
+    vertex of one automorphism orbit — and every isomorphic renumbering
+    of the pattern — resolves to the same entry; this is the lookup
+    contract between ``compile(local=True)`` (which registers outputs)
+    and ``CompiledPlan.local_counts`` (which reads them).  Anchored keys
+    get their own ``loca:`` prefix: marker-encoded labels of an anchored
+    unlabelled pattern could otherwise collide with the real labels of
+    an unanchored labelled one."""
+    if anchor is None:
+        return f"loc:{pattern_key(p)}"
+    _, qc, _ = mark_free(p, (anchor,))
+    return f"loca:{pattern_key(qc)}"
+
+
+def is_local_output(name: str) -> bool:
+    """True for ``Plan.outputs`` entries holding partial-embedding
+    tensors rather than scalar counts (``pattern_key`` strings always
+    start with a digit, so the prefix is unambiguous)."""
+    return name.startswith(("loc:", "loca:"))
 
 
 def pattern_to_dict(p: Pattern) -> dict:
@@ -178,8 +216,40 @@ class ShrinkageCorrect:
                 "divisor": self.divisor}
 
 
+@dataclass(frozen=True)
+class LocalCount:
+    """Per-partial-embedding counts: entry e_c of the output tensor is
+    the number of injective maps of the whole pattern with the cutting
+    set pinned to e_c.  Evaluates as
+
+        L = Π_i M_i  −  Σ coeff · corr          (then off-diagonal mask)
+
+    where each M_i is a Möbius combination of ``cut_size``-axis free-hom
+    ``Contract`` tensors (the CutJoin factors, axes aligned by cut rank)
+    and each correction is a free-hom tensor over the ``keep`` axes only
+    (anchored shrinkage terms).  ``keep`` lists the surviving cut axes in
+    output order: the full tuple is the reduce-free tensor, a single
+    axis sums the others away in-kernel (the keep-axis Pallas tier)."""
+    key: str
+    cut_size: int
+    keep: Tuple[int, ...]
+    factors: Tuple[Tuple[Term, ...], ...]
+    corrections: Tuple[Term, ...] = ()
+
+    def refs(self):
+        return tuple(r for f in self.factors for _, r in f) + \
+            tuple(r for _, r in self.corrections)
+
+    def to_dict(self) -> dict:
+        return {"op": "local", "key": self.key, "cut_size": self.cut_size,
+                "keep": list(self.keep),
+                "factors": [[[c, r] for c, r in f] for f in self.factors],
+                "corrections": [[c, r] for c, r in self.corrections]}
+
+
 _OPS = {"contract": Contract, "intersect": Intersect, "mobius": MobiusCombine,
-        "cutjoin": CutJoin, "shrinkage": ShrinkageCorrect}
+        "cutjoin": CutJoin, "shrinkage": ShrinkageCorrect,
+        "local": LocalCount}
 
 
 def op_from_dict(d: dict):
@@ -201,6 +271,11 @@ def op_from_dict(d: dict):
         return ShrinkageCorrect(d["key"], d["base"],
                                 tuple((m, r) for m, r in d["corrections"]),
                                 d["divisor"])
+    if kind == "local":
+        return LocalCount(d["key"], d["cut_size"], tuple(d["keep"]),
+                          tuple(tuple((c, r) for c, r in f)
+                                for f in d["factors"]),
+                          tuple((c, r) for c, r in d["corrections"]))
     raise ValueError(f"unknown op kind {kind!r}")
 
 
@@ -238,6 +313,19 @@ class Plan:
 
     def output_for(self, p: Pattern) -> str:
         return self.outputs[pattern_key(p)]
+
+    def set_local_output(self, p: Pattern, node_key: str,
+                         anchor: Optional[int] = None):
+        """Register a partial-embedding output under ``local_key``; lives
+        in the same serialised table as count outputs (prefix-separated,
+        see ``is_local_output``)."""
+        if node_key not in self.nodes:
+            raise KeyError(node_key)
+        self.outputs[local_key(p, anchor)] = node_key
+
+    def local_output_for(self, p: Pattern,
+                         anchor: Optional[int] = None) -> str:
+        return self.outputs[local_key(p, anchor)]
 
     def op_counts(self) -> dict:
         out: dict = {}

@@ -29,6 +29,7 @@ Node values memoise per plan *and* feed the engine's hom memo, so
 repeated queries against a compiled application never re-contract."""
 from __future__ import annotations
 
+import functools
 from typing import Dict, Optional
 
 import jax
@@ -38,15 +39,25 @@ import numpy as np
 from repro.core.counting import CountingEngine
 from repro.core.pattern import Pattern, clique
 from repro.graph.storage import Graph
-from repro.compiler.ir import (Contract, CutJoin, Intersect, MobiusCombine,
-                               Plan, ShrinkageCorrect, domain_keys,
-                               free_skeleton, pattern_key)
+from repro.compiler.ir import (Contract, CutJoin, Intersect, LocalCount,
+                               MobiusCombine, Plan, ShrinkageCorrect,
+                               domain_keys, free_skeleton, is_local_output,
+                               local_key, pattern_key)
 
 
 @jax.jit
 def _join_reduce(stack):
     """Π of the stacked factor tensors (leading axis), then full sum."""
     return jnp.sum(jnp.prod(stack, axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def _join_keep(stack, axis):
+    """Keep-axis XLA fallback/oracle: Π of stacked (n, n) factors, off-
+    diagonal masked, summed over the non-kept axis (f64 under x64)."""
+    prod = jnp.prod(stack, axis=0)
+    off = 1.0 - jnp.eye(prod.shape[0], dtype=prod.dtype)
+    return jnp.sum(prod * off, axis=1 - axis)
 
 
 class CompiledPlan:
@@ -64,7 +75,9 @@ class CompiledPlan:
         self.from_cache = from_cache
         self._values: Dict[str, object] = {}
         self._masks: Dict[int, np.ndarray] = {}
-        self.stats = {"node_evals": 0, "node_hits": 0}
+        self._factors: Dict[tuple, np.ndarray] = {}
+        self.stats = {"node_evals": 0, "node_hits": 0,
+                      "exists_early_exits": 0}
 
     # -- public API --------------------------------------------------------------
     def count(self, p: Pattern) -> float:
@@ -72,9 +85,66 @@ class CompiledPlan:
         return float(self.value(self.plan.output_for(p)))
 
     def counts(self) -> dict:
-        """All compiled outputs: canonical pattern key -> count."""
+        """All compiled count outputs: canonical pattern key -> count
+        (partial-embedding outputs are tensors — read them through
+        ``local_counts``)."""
         return {pk: float(self.value(nk))
-                for pk, nk in self.plan.outputs.items()}
+                for pk, nk in self.plan.outputs.items()
+                if not is_local_output(pk)}
+
+    def has_local(self, p: Pattern, anchor: Optional[int] = None) -> bool:
+        """True when the plan carries the requested partial-embedding
+        output (compiled with ``local=True``; unanchored tensors need an
+        eligible cutting set — cliques have none)."""
+        return local_key(p, anchor) in self.plan.outputs
+
+    def local_counts(self, p: Pattern,
+                     anchor: Optional[int] = None) -> np.ndarray:
+        """Partial-embedding counts of one pattern compiled with
+        ``local=True``.
+
+        ``anchor=None``: the full local tensor over the cutting set
+        chosen for ``p.canonical()`` — axis j indexes the assignment of
+        the j-th smallest cut vertex *of the canonical form*
+        (``plan.meta["local_cuts"]`` records the cut; the key collapses
+        isomorphic renumberings, so the shared answer is expressed in
+        the one numbering every caller can reconstruct), entry e_c is
+        the exact number of injective maps pinning the cut to e_c.
+        ``anchor=v``: the (N,) vector of completion counts with pattern
+        vertex v pinned per graph vertex — anchors in one automorphism
+        orbit share their entry (``local_key`` collapses them).  Raises
+        ``KeyError`` when the plan has no such output."""
+        key = local_key(p, anchor)
+        nk = self.plan.outputs.get(key)
+        if nk is None:
+            raise KeyError(
+                f"plan has no partial-embedding output {key!r} "
+                f"(compiled without local=True, or the pattern has no "
+                f"eligible cutting set)")
+        # a copy, not the memo: plans are memoised across serving steps,
+        # so handing out the node-value array itself would let one
+        # caller's in-place edit corrupt every later answer
+        return np.array(self.value(nk), np.float64)
+
+    def exists(self, p: Pattern) -> bool:
+        """Existence with early exit: on a local plan, factor tensors
+        evaluate one subpattern at a time and an all-zero factor decides
+        False before the join or any shrinkage correction runs (one
+        subpattern with no embeddings means the whole pattern has none);
+        otherwise any positive local entry — or, without a local output,
+        the scalar count — decides."""
+        nk = self.plan.outputs.get(local_key(p))
+        node = self.plan.nodes.get(nk) if nk is not None else None
+        if isinstance(node, LocalCount):
+            for terms in node.factors:
+                if not np.any(np.abs(self._combine(terms, node.cut_size))
+                              > 0.5):
+                    self.stats["exists_early_exits"] += 1
+                    return False
+            return bool(np.max(self.value(nk)) > 0.5)
+        if nk is not None:
+            return bool(np.max(np.asarray(self.value(nk))) > 0.5)
+        return self.count(p) > 0.5
 
     def executable(self, p: Pattern):
         """Zero-arg closure for one pattern (plan handle for callers that
@@ -136,6 +206,8 @@ class CompiledPlan:
             return acc / node.divisor
         if isinstance(node, CutJoin):
             return self._eval_cutjoin(node)
+        if isinstance(node, LocalCount):
+            return self._eval_local(node)
         if isinstance(node, ShrinkageCorrect):
             acc = self.value(node.base)
             for mult, ref in node.corrections:
@@ -143,14 +215,28 @@ class CompiledPlan:
             return acc / node.divisor
         raise TypeError(type(node))
 
-    def _eval_cutjoin(self, node: CutJoin) -> float:
-        n = self.graph.n
-        Ms = []
-        for terms in node.factors:
-            M = np.zeros((n,) * node.cut_size)
+    def _combine(self, terms, ndim: int) -> np.ndarray:
+        """One Möbius factor tensor Σ coeff · tensor(ref), f64 — treat
+        the result as READ-ONLY.  Genuine combinations memoise by term
+        tuple (CutJoin and LocalCount nodes over the same cut, and
+        ``exists`` early-exit probes, share them); a single identity
+        term returns the node value itself — duplicating every Contract
+        tensor into a second (n,)*ndim array would roughly double a
+        long-lived serving plan's steady-state memory."""
+        if len(terms) == 1 and terms[0][0] == 1.0:
+            return np.asarray(self.value(terms[0][1]), np.float64)
+        key = (terms, ndim)
+        M = self._factors.get(key)
+        if M is None:
+            M = np.zeros((self.graph.n,) * ndim)
             for coeff, ref in terms:
                 M = M + coeff * np.asarray(self.value(ref), np.float64)
-            Ms.append(M)
+            self._factors[key] = M
+        return M
+
+    def _eval_cutjoin(self, node: CutJoin) -> float:
+        Ms = [self._combine(terms, node.cut_size)
+              for terms in node.factors]
         if self.cutjoin_kernel and node.cut_size <= 2:
             from repro.kernels import ops
             block = ops.cutjoin_exact_block(Ms)
@@ -164,6 +250,47 @@ class CompiledPlan:
         with self.counter._x64():
             return float(_join_reduce(jnp.stack([jnp.asarray(M)
                                                  for M in Ms])))
+
+    def _eval_local(self, node: LocalCount) -> np.ndarray:
+        """The decomposition join without the final reduce.  Reduce-free
+        (keep == all axes): the factor product with the off-diagonal
+        mask applied *after* subtracting corrections — anchored
+        correction tensors only equal true pinned-injective counts at
+        distinct pins, so diagonal entries are defined to zero by the
+        mask, matching Σ L = inj exactly.  Keep-axis (|cut| = 2, one
+        surviving axis): the Pallas keep-axis kernel when the exactness
+        guard admits the factors, else the jitted f64 XLA mask-and-sum
+        (also the kernel's bit-for-bit oracle); corrections are already
+        vector-sized and subtract after the reduce."""
+        n = self.graph.n
+        Ms = [self._combine(terms, node.cut_size)
+              for terms in node.factors]
+        if node.cut_size == 1 or len(node.keep) == node.cut_size:
+            out = Ms[0].copy()
+            for M in Ms[1:]:
+                out *= M
+            if node.corrections:
+                out -= self._combine(node.corrections, len(node.keep))
+            if node.cut_size >= 2:           # injectivity of the cut tuple
+                np.fill_diagonal(out, 0.0)
+            return out
+        # keep-axis reduce: |cut| = 2, one surviving axis
+        axis = node.keep[0]
+        out = None
+        if self.cutjoin_kernel:
+            from repro.kernels import ops
+            block = ops.cutjoin_exact_block(Ms)
+            if block is not None:            # f32 chunks provably exact
+                out = ops.cutjoin_reduce_keep(Ms, keep=axis,
+                                              bm=block, bn=block)
+        if out is None:
+            with self.counter._x64():
+                out = np.asarray(_join_keep(
+                    jnp.stack([jnp.asarray(M) for M in Ms]), axis),
+                    np.float64)
+        if node.corrections:
+            out = out - self._combine(node.corrections, 1)
+        return out
 
     def _mask(self, k: int) -> np.ndarray:
         """Π_{a<b} [x_a != x_b] over a (n,)*k grid."""

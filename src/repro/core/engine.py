@@ -233,25 +233,7 @@ class MiningEngine:
     def _shrinkage_with_maps(self, p: Pattern, cut) -> list:
         """[(quotient pattern, map p-vertex -> quotient vertex)] for every
         cross-component merging partition (not deduped — Algorithm 1 needs
-        every tuple)."""
-        from repro.core.quotient import partitions
-        comps = p.components_without(cut)
-        comp_of = {}
-        for ci, comp in enumerate(comps):
-            for v in comp:
-                comp_of[v] = ci
-        non_cut = tuple(v for v in range(p.n) if v not in cut)
-        out = []
-        for sigma in partitions(non_cut):
-            nontrivial = [b for b in sigma if len(b) > 1]
-            if not nontrivial:
-                continue
-            if not all(len({comp_of[v] for v in b}) == len(b)
-                       for b in sigma):
-                continue
-            full = [[v] for v in sorted(cut)] + [sorted(b) for b in sigma]
-            q, blk = p.quotient_with_map(full)
-            if q is None:
-                continue
-            out.append((q, blk))
-        return out
+        every tuple).  Shared with the compiler's anchored LocalCount
+        corrections via ``quotient.shrinkage_quotients_with_maps``."""
+        from repro.core.quotient import shrinkage_quotients_with_maps
+        return shrinkage_quotients_with_maps(p, cut)

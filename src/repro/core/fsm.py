@@ -40,8 +40,24 @@ class FSMResult:
 
 
 def mini_support(counter: CountingEngine, p: Pattern) -> int:
-    """Fallback MINI support: one vectorised domain matrix per pattern
-    (``inj_free_all``), min over the per-vertex nonzero counts."""
+    """Fallback MINI support through the partial-embedding API: one
+    anchored local-count vector per automorphism orbit (the anchored
+    vector *is* the domain — # injective maps pinning the orbit
+    representative per graph vertex), computed off the decomposition
+    join where a cutting set contains the orbit and via the flat Möbius
+    expansion otherwise; ``pattern_domains`` falls back to the engine's
+    vectorised ``inj_free_all`` on any failure.  Support = min over
+    orbits of the domain's nonzero count (orbit members share domains,
+    so representatives suffice)."""
+    from repro.api import pattern_domains
+    doms = pattern_domains(counter, p)
+    return int(min(np.count_nonzero(d > 0.5) for d in doms.values()))
+
+
+def mini_support_dense(counter: CountingEngine, p: Pattern) -> int:
+    """Legacy MINI support: the full domain matrix in one vectorised
+    ``inj_free_all`` partition walk (kept as the differential oracle for
+    the partial-embedding route and as a ``support_fn`` swap-in)."""
     dom = counter.inj_free_all(p)
     return int(np.count_nonzero(dom > 0.5, axis=1).min())
 

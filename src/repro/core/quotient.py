@@ -81,6 +81,34 @@ def hom_expansion(p: Pattern) -> tuple:
                         key=lambda t: (t[1].n, t[1].m, sorted(t[1].edges))))
 
 
+def shrinkage_quotients_with_maps(p: Pattern, cut: frozenset) -> list:
+    """[(quotient pattern, map p-vertex -> quotient vertex)] for every
+    cross-component merging partition of p - cut — NOT deduplicated by
+    isomorphism, because callers that pin cut vertices (Algorithm 1's
+    hash tables, the compiler's anchored LocalCount corrections) need
+    the vertex map of every individual partition.  Label-conflicting and
+    self-loop merges are dropped (identically zero)."""
+    comps = p.components_without(cut)
+    comp_of = {}
+    for ci, comp in enumerate(comps):
+        for v in comp:
+            comp_of[v] = ci
+    non_cut = tuple(v for v in range(p.n) if v not in cut)
+    out = []
+    for sigma in partitions(non_cut):
+        nontrivial = [b for b in sigma if len(b) > 1]
+        if not nontrivial:
+            continue
+        if not all(len({comp_of[v] for v in b}) == len(b) for b in sigma):
+            continue                        # merged within one component
+        full = [[v] for v in sorted(cut)] + [sorted(b) for b in sigma]
+        q, blk = p.quotient_with_map(full)
+        if q is None:
+            continue
+        out.append((q, blk))
+    return out
+
+
 def shrinkage_patterns(p: Pattern, cut: frozenset) -> list:
     """The paper's shrinkage patterns for a decomposition with cutting set
     ``cut``: quotients merging >=2 vertices that lie in *different*

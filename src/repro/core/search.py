@@ -1,4 +1,6 @@
-"""Joint decomposition-space search (paper §4.3, Fig 23).
+"""Joint decomposition-space search (paper §4.3, Fig 23) and the
+pseudo-clique miner (paper §3's PC application on the partial-embedding
+API).
 
 For an application with n concrete patterns, each with m candidate cutting
 sets, the joint space is m^n (cross-pattern reuse couples the choices).
@@ -7,6 +9,13 @@ pattern's cutting set greedily against the *current* assignment of all
 others, until a full pass changes nothing — a coordinate-descent local
 optimum.  Baselines: independent/separate tuning, random sampling, and
 simulated annealing (the paper's comparison set).
+
+``mine_pseudo_cliques`` is the advanced-app consumer of the
+partial-embedding API: per-vertex participation counts of every k-clique-
+minus-``missing``-edges pattern, read off anchored local-count vectors
+(one per automorphism orbit per pattern) instead of materialised
+embeddings — the hotspot ranking Peregrine-style systems pay a full
+enumeration for.
 """
 from __future__ import annotations
 
@@ -15,9 +24,11 @@ import random
 import time
 from dataclasses import dataclass, field
 
+import numpy as np
+
 from repro.core import cost_model as CM
 from repro.core.decomposition import candidates
-from repro.core.pattern import Pattern
+from repro.core.pattern import Pattern, pseudo_clique
 
 
 @dataclass
@@ -166,3 +177,50 @@ METHODS = {
     "annealing": simulated_annealing,
     "genetic": genetic,
 }
+
+
+# -- pseudo-clique mining off the partial-embedding API ---------------------------
+
+@dataclass
+class PseudoCliqueResult:
+    """Per-vertex pseudo-clique participation.  ``per_vertex[u]`` is the
+    number of edge-induced embeddings across all k-clique-minus-
+    ``missing``-edges patterns that contain graph vertex u;
+    ``totals[pattern]`` the global count per pattern; ``hotspots`` the
+    vertices with ``per_vertex >= min_count``, highest first."""
+    k: int
+    missing: int
+    per_vertex: np.ndarray
+    totals: dict
+    hotspots: list
+
+
+def mine_pseudo_cliques(graph, k: int, missing: int = 1, *,
+                        min_count: int = 1, counter=None, cache=None,
+                        use_compiler: bool = True) -> PseudoCliqueResult:
+    """Mine pseudo-cliques (k-cliques with ``missing`` edges deleted)
+    through anchored local counts: each pattern contributes one anchored
+    vector per automorphism orbit — the completion counts with that
+    orbit pinned per graph vertex — weighted into per-vertex embedding
+    participation (``api.vertex_counts``).  No embedding is ever
+    materialised; the global count falls out of the same vectors
+    (Σ_u vertex_counts[u] = n_p · #embeddings, exactly).  A shared
+    ``CountingEngine`` CSE-merges the patterns' quotient contractions,
+    and ``cache=None`` (the process plan cache) makes repeat mines
+    compile-free.
+    """
+    from repro.api import vertex_counts
+    from repro.core.counting import CountingEngine
+    counter = counter or CountingEngine(graph)
+    pats = pseudo_clique(k, missing)
+    per_vertex = np.zeros(graph.n)
+    totals = {}
+    for p in pats:
+        vc = vertex_counts(p, graph, counter=counter, cache=cache,
+                           use_compiler=use_compiler)
+        per_vertex += vc
+        totals[p] = vc.sum() / p.n
+    hotspots = sorted((u for u in range(graph.n)
+                       if per_vertex[u] >= min_count),
+                      key=lambda u: (-per_vertex[u], u))
+    return PseudoCliqueResult(k, missing, per_vertex, totals, hotspots)

@@ -21,6 +21,17 @@ Two primitives live here:
                  every chunk partial fits f32's 2^24 integer range —
                  ``exact_block`` picks the chunk size that provably does.
 
+``prod_reduce_keep``  the keep-axis variant behind ``LocalCount`` plans
+                 (the partial-embedding API): out[x] = Σ_{y≠x} Π_i
+                 F_i[x, y] — the same masked product but with one cut
+                 axis *kept* as the output, reducing only the other.
+                 Each grid tile writes its (bm,) per-row f32 partials
+                 (each accumulating bn cells, the same bound
+                 ``exact_block`` certifies for ``prod_reduce``); the
+                 host sums the column-tile partials per row in f64.
+                 ``keep=1`` transposes the factors host-side and runs
+                 the same kernel.
+
 Both primitives zero-pad their inputs up to the tile multiple, so any
 ``n`` works; padding is value-preserving because padded mask / factor
 entries are zero and the reduction is a sum.
@@ -153,6 +164,72 @@ def _vecjoin_tiles(stack, *, bn, interpret):
         out_shape=jax.ShapeDtypeStruct((1, grid[0]), jnp.float32),
         interpret=interpret,
     )(stack)
+
+
+def _pairjoin_keep_kernel(stack_ref, out_ref, *, nf, masked, bm, bn):
+    """One (bm, bn) tile of the keep-axis join: per-row partials
+    out[x] = Σ_y [x≠y] · Π_i F_i[x, y] over this tile's columns.  Each
+    partial accumulates bn cells — the same chunk bound ``exact_block``
+    certifies — and the host reduces the per-tile rows in f64."""
+    i, j = pl.program_id(0), pl.program_id(1)
+    prod = stack_ref[0, ...]
+    for f in range(1, nf):
+        prod = prod * stack_ref[f, ...]
+    if masked:
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
+        cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
+        prod = jnp.where(rows == cols, jnp.float32(0.0), prod)
+    out_ref[:, 0] = jnp.sum(prod, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("distinct", "bm", "bn", "interpret"))
+def _pairjoin_keep_tiles(stack, *, distinct, bm, bn, interpret):
+    k, M, N = stack.shape
+    grid = (M // bm, N // bn)
+    kern = functools.partial(_pairjoin_keep_kernel, nf=k, masked=distinct,
+                             bm=bm, bn=bn)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, bm, bn), lambda i, j: (0, i, j))],
+        out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, grid[1]), jnp.float32),
+        interpret=interpret,
+    )(stack)
+
+
+def prod_reduce_keep(factors, *, keep: int = 0, distinct: bool = True,
+                     bm: int = 128, bn: int = 128,
+                     interpret: bool = False) -> np.ndarray:
+    """Keep-axis masked product-reduce over (n, n) factors:
+
+        keep=0:  out[x] = Σ_y [x≠y] · Π_i F_i[x, y]
+        keep=1:  out[y] = Σ_x [x≠y] · Π_i F_i[x, y]
+
+    The anchored partial-embedding read off a |cut| = 2 decomposition
+    join: one cut axis survives as the output vector, the other is
+    reduced in-kernel under the same tile-index injectivity mask as
+    ``prod_reduce`` — still nothing O(n²) materialised beyond the factor
+    tensors the caller already holds.  Factors are cast to f32 and
+    zero-padded to the tile multiple (padding adds zero cells to real
+    rows and zero rows beyond n, both harmless); per-tile f32 row
+    partials are summed across column tiles on the host in f64 — exact
+    for integer factors while each bn-cell partial stays below 2^24,
+    which ``exact_block`` certifies (the guard is identical: both
+    kernels chunk the same per-partial cell count).
+    """
+    stack = jnp.stack([jnp.asarray(F, jnp.float32) for F in factors])
+    assert stack.ndim == 3 and stack.shape[1] == stack.shape[2]
+    assert keep in (0, 1)
+    if keep == 1:
+        stack = jnp.swapaxes(stack, 1, 2)    # same kernel, rows <-> cols
+    n = stack.shape[1]
+    b = min(bm, bn, max(n, 1))
+    stack = _pad_to(stack, (1, b, b))
+    tiles = _pairjoin_keep_tiles(stack, distinct=distinct, bm=b, bn=b,
+                                 interpret=interpret)
+    return np.asarray(tiles, np.float64).sum(axis=1)[:n]
 
 
 EXACT_LIMIT = float(1 << 24)                 # f32 exact-integer range

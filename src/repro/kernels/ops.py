@@ -86,6 +86,24 @@ def cutjoin_reduce(factors, *, distinct=True, bm=None, bn=None,
                            interpret=interpret)
 
 
+def cutjoin_reduce_keep(factors, *, keep=0, distinct=True, bm=None,
+                        bn=None, interpret=None) -> np.ndarray:
+    """Keep-axis decomposition join: out[x] = Σ_{y≠x} Π_i M_i(x, y) over
+    (n, n) cut tensors — the anchored partial-embedding vector of a
+    |cut| = 2 plan (``keep`` picks which cut axis survives).  Same
+    padding, masking, and chunked f32/f64 exactness story as
+    ``cutjoin_reduce``; ``cutjoin_exact_block`` certifies the same chunk
+    size for both (each partial accumulates one tile-width of cells).
+    """
+    interpret = _auto_interpret(interpret)
+    if bm is None:
+        bm = 1024 if interpret else 128
+    if bn is None:
+        bn = bm
+    return _mr.prod_reduce_keep(factors, keep=keep, distinct=distinct,
+                                bm=bm, bn=bn, interpret=interpret)
+
+
 def cutjoin_exact_block(factors, *, interpret=None):
     """Chunk size for which ``cutjoin_reduce`` is exact on the given
     integer-valued factors, or None when no f32 chunking can guarantee

@@ -9,6 +9,12 @@ Counting apps compile the whole pattern set jointly through
 ``repro.compiler`` (one plan, shared quotient contractions, plan cache);
 ``--no-compiler`` keeps the legacy per-pattern engine path, and
 ``--plan-cache DIR`` persists compiled plans across runs.
+
+``--local-counts`` switches to the partial-embedding API (paper §5):
+``chain`` prints the hottest vertices by per-vertex embedding
+participation, ``pc`` mines pseudo-clique hotspots through anchored
+local-count vectors, and ``existence`` takes the factor-level early
+exit.
 """
 from __future__ import annotations
 
@@ -59,6 +65,10 @@ def main(argv=None):
     ap.add_argument("--plan-cache-entries", type=int, default=None,
                     metavar="N", help="cap the on-disk plan store at N "
                     "entries (LRU-by-mtime eviction)")
+    ap.add_argument("--local-counts", action="store_true",
+                    help="partial-embedding API: per-vertex counts "
+                    "(chain), pseudo-clique hotspots (pc), early-exit "
+                    "existence")
     args = ap.parse_args(argv)
 
     if args.app == "fsm" and args.labels == 0:
@@ -93,23 +103,61 @@ def main(argv=None):
             print(f"  {args.k}-motif m={p.m:2d} {sorted(p.edges)}: "
                   f"{v:,.0f}")
     elif args.app == "chain":
+        p = chain(args.k)
+        vc = None
         if args.no_compiler:
             eng = MiningEngine(g)
-            c = eng.get_pattern_count(chain(args.k), use_compiler=False)
+            c = eng.get_pattern_count(p, use_compiler=False)
+            if args.local_counts:
+                from repro.api import vertex_counts
+                vc = vertex_counts(p, g, counter=eng.counter,
+                                   use_compiler=False)
         else:
             from repro import compiler
-            cp = compiler.compile(chain(args.k), g, cache=plan_cache)
-            c = cp.count(chain(args.k))
+            cp = compiler.compile(p, g, cache=plan_cache,
+                                  local=args.local_counts)
+            c = cp.count(p)
+            if args.local_counts:
+                # orbit vectors straight off the plan just compiled —
+                # its node-value memo already holds the contractions
+                vc = np.zeros(g.n)
+                for orbit in p.vertex_orbits():
+                    vc += len(orbit) * cp.local_counts(p, orbit[0])
+                vc /= p.aut_order()
         print(f"  {args.k}-chain (edge-induced): {c:,.0f}")
+        if vc is not None:
+            top = sorted(range(g.n), key=lambda u: -vc[u])[:10]
+            print("  hottest vertices (embeddings containing u):")
+            for u in top:
+                print(f"    v{u}: {vc[u]:,.0f}")
     elif args.app == "pc":
-        from repro.core.cliques import pseudo_clique_count
-        total = pseudo_clique_count(g, args.k)
-        print(f"  {args.k}-pseudo-clique (k=1) count: {total:,.0f}")
+        if args.local_counts:
+            from repro.core.search import mine_pseudo_cliques
+            r = mine_pseudo_cliques(g, args.k, missing=1)
+            tot = sum(r.totals.values())
+            print(f"  {args.k}-pseudo-clique (missing=1) embeddings: "
+                  f"{tot:,.0f} across {len(r.totals)} patterns")
+            print("  hotspots (participation):")
+            for u in r.hotspots[:10]:
+                print(f"    v{u}: {r.per_vertex[u]:,.0f}")
+        else:
+            from repro.core.cliques import pseudo_clique_count
+            total = pseudo_clique_count(g, args.k)
+            print(f"  {args.k}-pseudo-clique (k=1) count: {total:,.0f}")
     elif args.app == "existence":
-        eng = MiningEngine(g)
-        from repro.core.pattern import clique
-        for k in range(3, args.k + 1):
-            print(f"  K{k} exists: {eng.pattern_exists(clique(k))}")
+        if args.local_counts:
+            from repro import api
+            from repro.core.counting import CountingEngine
+            from repro.core.pattern import clique
+            eng = CountingEngine(g)
+            for k in range(3, args.k + 1):
+                print(f"  K{k} exists: "
+                      f"{api.exists(clique(k), g, counter=eng)}")
+        else:
+            eng = MiningEngine(g)
+            from repro.core.pattern import clique
+            for k in range(3, args.k + 1):
+                print(f"  K{k} exists: {eng.pattern_exists(clique(k))}")
     elif args.app == "fsm":
         r = fsm(g, args.support, max_vertices=args.k if args.k >= 2 else 3,
                 use_compiler=not args.no_compiler, plan_cache=plan_cache)

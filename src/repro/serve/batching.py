@@ -135,12 +135,19 @@ class PatternRequest:
     """One mining query: count every pattern of ``patterns`` in the
     batcher's graph (edge-induced), or — with ``support=True`` — their
     FSM MINI supports (labelled patterns, served off the same compiled
-    plan via its domain nodes)."""
+    plan via its domain nodes), or — with ``local=True`` — their
+    partial-embedding local counts (the anchored (N,) completion-count
+    vector when ``anchor`` names a pattern vertex, else the full local
+    tensor over the plan's cutting set; patterns without a cutting set
+    fill ``local_counts[p] = None`` for unanchored queries)."""
     uid: int
     patterns: tuple
     support: bool = False               # MINI support instead of counts
+    local: bool = False                 # partial-embedding tensors
+    anchor: int | None = None           # pattern vertex pin (local=True)
     counts: dict = field(default_factory=dict)
     supports: dict = field(default_factory=dict)
+    local_counts: dict = field(default_factory=dict)
     from_cache: bool = False
     done: bool = False
     error: bool = False                 # served neither compiled nor direct
@@ -150,13 +157,16 @@ class PatternQueryBatcher:
     """Compile-once-execute-many serving loop for pattern counts.
 
     Queued requests are drained up to ``max_batch`` per step and grouped
-    by (canonical pattern-set signature, support flag); each group
-    compiles (or cache-hits) one joint plan and executes it for every
-    request in the group.  Labelled patterns ride the same path —
-    decomposition joins included — and ``support=True`` requests are
-    served off the plan's MINI-domain nodes.  A shared
-    ``CountingEngine`` keeps the hom memo warm across plans, so even
-    distinct pattern sets reuse overlapping quotient contractions.
+    by (canonical pattern-set signature, support flag, local flag); each
+    group compiles (or cache-hits) one joint plan and executes it for
+    every request in the group.  Labelled patterns ride the same path —
+    decomposition joins included — ``support=True`` requests are served
+    off the plan's MINI-domain nodes, and ``local=True`` requests off
+    its partial-embedding ``LocalCount`` outputs (anchored vectors pin
+    ``req.anchor``; different anchors share one plan — every orbit's
+    vector is compiled).  A shared ``CountingEngine`` keeps the hom
+    memo warm across plans, so even distinct pattern sets reuse
+    overlapping quotient contractions.
     """
 
     def __init__(self, graph, *, cache=None, apct=None, max_batch: int = 8):
@@ -176,14 +186,14 @@ class PatternQueryBatcher:
     def submit(self, req: PatternRequest):
         self.queue.append(req)
 
-    def _plan_for(self, sig, patterns: tuple, domains: bool):
-        """CompiledPlan for one group, memoised per (signature, domains)
-        so repeat steps reuse the lowered plan (and its node-value memo)
-        instead of re-lowering on every plan-cache hit.  None when
-        compilation fails — callers serve the group via the direct
-        path.  ``domains`` compiles MINI-domain nodes for support
-        queries."""
-        cp = self._plans.get((sig, domains))
+    def _plan_for(self, sig, patterns: tuple, domains: bool, local: bool):
+        """CompiledPlan for one group, memoised per (signature, domains,
+        local) so repeat steps reuse the lowered plan (and its
+        node-value memo) instead of re-lowering on every plan-cache hit.
+        None when compilation fails — callers serve the group via the
+        direct path.  ``domains`` compiles MINI-domain nodes for support
+        queries; ``local`` compiles partial-embedding outputs."""
+        cp = self._plans.get((sig, domains, local))
         if cp is not None:
             self.stats["cache_hits"] += 1
             return cp
@@ -195,12 +205,23 @@ class PatternQueryBatcher:
         try:
             cp = compiler.compile(patterns, self.graph, apct=self.apct,
                                   counter=self.counter, cache=self.cache,
-                                  domains=domains)
+                                  domains=domains, local=local)
         except Exception:
             return None
         self.stats["cache_hits" if cp.from_cache else "compiles"] += 1
-        self._plans[(sig, domains)] = cp
+        self._plans[(sig, domains, local)] = cp
         return cp
+
+    def _local_direct(self, p, anchor):
+        """Direct-path partial-embedding fallback over the shared
+        engine; None for an unanchored query on a cut-less pattern."""
+        from repro.api import local_counts as api_local
+        try:
+            return api_local(p, self.graph, anchor=anchor,
+                             counter=self.counter,
+                             use_compiler=False).counts
+        except ValueError:
+            return None
 
     def _serve(self, req: PatternRequest, cp):
         """Fill one request: compiled plan first, legacy direct second;
@@ -212,6 +233,11 @@ class PatternQueryBatcher:
             if req.support:
                 req.supports = {p: cp.mini_support(p)
                                 for p in req.patterns}
+            elif req.local:
+                req.local_counts = {
+                    p: (cp.local_counts(p, req.anchor)
+                        if cp.has_local(p, req.anchor) else None)
+                    for p in req.patterns}
             else:
                 req.counts = {p: cp.count(p) for p in req.patterns}
             req.from_cache = cp.from_cache
@@ -220,6 +246,10 @@ class PatternQueryBatcher:
                 if req.support:
                     req.supports = {p: mini_support(self.counter, p)
                                     for p in req.patterns}
+                elif req.local:
+                    req.local_counts = {
+                        p: self._local_direct(p, req.anchor)
+                        for p in req.patterns}
                 else:
                     req.counts = {p: self.counter.edge_induced(p)
                                   for p in req.patterns}
@@ -240,10 +270,10 @@ class PatternQueryBatcher:
         groups: dict = {}
         for req in batch:
             groups.setdefault(
-                (patterns_signature(req.patterns), req.support),
-                []).append(req)
-        for (sig, support), reqs in groups.items():
-            cp = self._plan_for(sig, reqs[0].patterns, support)
+                (patterns_signature(req.patterns), req.support,
+                 req.local), []).append(req)
+        for (sig, support, local), reqs in groups.items():
+            cp = self._plan_for(sig, reqs[0].patterns, support, local)
             for req in reqs:
                 self._serve(req, cp)
         self.stats["steps"] += 1

@@ -1,0 +1,24 @@
+"""Shared test configuration.
+
+Hypothesis profiles: property tests in this suite must be reproducible
+in CI — a nondeterministic seed that finds a counterexample on one run
+and not the next is a flake, not a signal.  The ``ci`` profile
+(``derandomize=True``) makes every hypothesis suite draw the same
+examples on every run; it activates automatically under ``CI=...`` or
+explicitly via ``HYPOTHESIS_PROFILE=ci``.  Local runs keep randomised
+search (``dev``) so new counterexamples can still be discovered, with
+deadlines off — contraction warm-up easily exceeds the default 200ms.
+"""
+import os
+
+try:
+    from hypothesis import settings
+except ImportError:                     # hypothesis optional (importorskip)
+    settings = None
+
+if settings is not None:
+    settings.register_profile("ci", derandomize=True, deadline=None,
+                              print_blob=True)
+    settings.register_profile("dev", deadline=None)
+    settings.load_profile(os.environ.get(
+        "HYPOTHESIS_PROFILE", "ci" if os.environ.get("CI") else "dev"))
