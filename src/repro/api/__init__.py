@@ -2,7 +2,8 @@
 early-exit existence, and per-vertex counts read off the decomposition
 join's cut tensors — see ``repro.api.local`` for the full story."""
 from repro.api.local import (LocalCounts, exists, local_counts,
-                             pattern_domains, vertex_counts)
+                             pattern_domains, plan_vertex_counts,
+                             top_vertices, vertex_counts)
 
 __all__ = ["LocalCounts", "local_counts", "exists", "vertex_counts",
-           "pattern_domains"]
+           "plan_vertex_counts", "top_vertices", "pattern_domains"]

@@ -24,6 +24,9 @@ table instead of rebuilding it:
                                   u = # edge-induced embeddings of ``p``
                                   containing graph vertex u (Σ over
                                   orbits of |orbit| · anchored / |Aut|).
+``vertex_counts(p, g, top_k=K)``  the K hottest vertices only, as
+                                  (value, vertex) pairs — serving hosts
+                                  read hotspots without the (N,) vector.
 ``pattern_domains(counter, p)``   FSM MINI domains per orbit
                                   representative through the same route
                                   (the decomposed domain path the count
@@ -189,16 +192,53 @@ def exists(pattern: Pattern, graph: Graph, *,
         return counter.existence(pattern)
 
 
+def plan_vertex_counts(cp, pattern: Pattern) -> np.ndarray:
+    """Orbit-weighted per-vertex embedding counts read off an
+    already-compiled ``local=True`` plan: Σ over orbits of |orbit| ·
+    anchored vector, / |Aut|.  The one home of the weighting formula —
+    ``vertex_counts``, the serving batcher's hotspot reader, and
+    ``mine.py`` all reduce through here, so the three routes cannot
+    drift apart."""
+    total = np.zeros(cp.graph.n)
+    for orbit in pattern.vertex_orbits():
+        total += len(orbit) * cp.local_counts(pattern, orbit[0])
+    return total / pattern.aut_order()
+
+
+def top_vertices(vec: np.ndarray, k: int) -> list:
+    """The K hottest entries of a per-vertex vector as (value, vertex)
+    pairs, hottest first (ties broken by vertex id, ascending, so the
+    answer is deterministic).  ``argpartition`` selects in O(N), then
+    only the K winners are sorted — the full vector is never ranked."""
+    k = max(0, min(int(k), len(vec)))
+    if k == 0:
+        return []
+    part = np.argpartition(vec, len(vec) - k)[len(vec) - k:]
+    # widen to every vertex tied with the selection boundary, then rank
+    # (value desc, vertex asc) — argpartition alone picks arbitrary
+    # members among boundary ties, which would make the answer depend
+    # on the partition's internal order
+    cand = np.nonzero(vec >= vec[part].min())[0]
+    cand = cand[np.lexsort((cand, -vec[cand]))][:k]
+    return [(float(vec[i]), int(i)) for i in cand]
+
+
 def vertex_counts(pattern: Pattern, graph: Graph, *,
                   counter: Optional[CountingEngine] = None, cache=None,
                   apct=None, use_compiler: bool = True,
-                  budget: int = 1 << 27) -> np.ndarray:
+                  budget: int = 1 << 27, top_k: Optional[int] = None):
     """Orbit-weighted per-vertex embedding counts: entry u is the number
     of edge-induced embeddings of ``pattern`` containing graph vertex u.
     One anchored vector per automorphism orbit suffices (orbit members
     share their vector); weighting by |orbit| counts each embedding once
     per pattern position it gives u, and /|Aut| collapses tuple
-    multiplicity — so Σ_u vertex_counts[u] = n_p · inj(p) / |Aut|."""
+    multiplicity — so Σ_u vertex_counts[u] = n_p · inj(p) / |Aut|.
+
+    ``top_k=K`` returns only the K hottest vertices as (value, vertex)
+    pairs, hottest first — the streaming reader serving hosts want:
+    orbit vectors accumulate internally, hotspots are selected in O(N)
+    (``argpartition``), and the full (N,) vector never crosses the API.
+    """
     counter = counter or CountingEngine(graph, budget=budget)
     total = np.zeros(graph.n)
     if use_compiler:
@@ -208,9 +248,8 @@ def vertex_counts(pattern: Pattern, graph: Graph, *,
             # shared across the orbit reads
             cp = _compile_local(pattern, graph, counter=counter,
                                 cache=cache, apct=apct, budget=budget)
-            for orbit in pattern.vertex_orbits():
-                total += len(orbit) * cp.local_counts(pattern, orbit[0])
-            return total / pattern.aut_order()
+            total = plan_vertex_counts(cp, pattern)
+            return total if top_k is None else top_vertices(total, top_k)
         except Exception:
             total[:] = 0.0              # per-orbit direct path takes over
     for orbit in pattern.vertex_orbits():
@@ -218,7 +257,8 @@ def vertex_counts(pattern: Pattern, graph: Graph, *,
                           counter=counter, cache=cache, apct=apct,
                           use_compiler=False, budget=budget)
         total += len(orbit) * lc.counts
-    return total / pattern.aut_order()
+    total /= pattern.aut_order()
+    return total if top_k is None else top_vertices(total, top_k)
 
 
 def pattern_domains(counter: CountingEngine, p: Pattern) -> dict:

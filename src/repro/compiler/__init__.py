@@ -19,8 +19,8 @@ package is that tier, as a pipeline of five stages:
 
 Vertex labels are first-class through every stage: labelled patterns
 generate the same candidate space (decomposition joins included — the
-label mask lives inside each CutJoin factor, so the |cut| <= 2 Pallas
-kernel tier runs unchanged), costing scales count bounds by label
+label mask lives inside each CutJoin factor, so the |cut| <= 3 Pallas
+kernel tiers run unchanged), costing scales count bounds by label
 selectivity, and lowering binds the pattern's label indices to the
 bound graph's one-hot indicator rows at plan-bind time — one plan
 serves any graph with a compatible label alphabet (out-of-alphabet
@@ -92,9 +92,9 @@ def _add_local_outputs(plan, patterns, graph, apct, budget, counter,
             if c < bc:
                 best, bc = cand, c
         if best is None and cands:
-            # every candidate prices infinite (the width estimate is an
-            # upper bound — free axes are unioned into every step even
-            # when the actual einsum never touches them): keep the last
+            # every candidate prices infinite (genuinely too wide for
+            # the budget — the width estimate now threads actual
+            # free-axis participation, so this is rare): keep the last
             # candidate (anchored: the flat Möbius fallback) so the
             # output exists, but do NOT commit its nodes to the shared
             # pool — mirroring select_candidates, execution chunks or
@@ -111,12 +111,21 @@ def _add_local_outputs(plan, patterns, graph, apct, budget, counter,
         return best
 
     for p in patterns:
-        # the unanchored tensor is built on the CANONICAL form: its key
-        # collapses isomorphic renumberings, so the axes must refer to a
-        # numbering every caller can reconstruct (canonical vertices) —
-        # compiling on the caller's instance would serve cached tensors
-        # whose axis attribution is wrong for any other renumbering
+        # every local candidate — unanchored AND anchored — is built on
+        # the CANONICAL form.  Unanchored: its key collapses isomorphic
+        # renumberings, so the axes must refer to a numbering every
+        # caller can reconstruct (canonical vertices).  Anchored: node
+        # keys embed cut/keep signatures in local vertex ids under the
+        # canonical ``pattern_key`` namespace, so instance-numbered
+        # nodes could collide with canonical-numbered ones (same key,
+        # different content — first-wins ``Plan.add`` would then serve
+        # one anchor another anchor's vector).  One numbering per plan
+        # makes equal keys mean equal content; anchored *values* are
+        # numbering-invariant (completion counts per graph vertex), so
+        # serving the canonical rep's vector for the instance anchor is
+        # exact.
         pc = p.canonical()
+        perm = p.canonical_perm()            # old (instance) -> canonical
         cand = pick(frontend.local_candidates(pc, graph_n=graph.n,
                                               budget=budget,
                                               max_cut=max_cutjoin_cut))
@@ -125,7 +134,7 @@ def _add_local_outputs(plan, patterns, graph, apct, budget, counter,
             local_cuts[_lk(pc)] = sorted(cand.cut)
         for orbit in p.vertex_orbits():
             cand = pick(frontend.local_candidates(
-                p, graph_n=graph.n, anchor=orbit[0], budget=budget,
+                pc, graph_n=graph.n, anchor=perm[orbit[0]], budget=budget,
                 max_cut=max_cutjoin_cut))
             plan.set_local_output(p, cand.out_key, anchor=orbit[0])
             local_cuts[_lk(p, orbit[0])] = (sorted(cand.cut)
@@ -135,7 +144,7 @@ def _add_local_outputs(plan, patterns, graph, apct, budget, counter,
 
 def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
             apct=None, counter=None, cache: Optional[PlanCache] = None,
-            budget: int = 1 << 27, max_cutjoin_cut: int = 2,
+            budget: int = 1 << 27, max_cutjoin_cut: int = 3,
             use_pallas: bool = False, cutjoin_kernel: bool = True,
             domains: bool = False, local: bool = False) -> CompiledPlan:
     """Compile a pattern (or application pattern set) for one graph.
@@ -143,6 +152,13 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
     Cache hit: deserialise the stored plan and lower it (no search).
     Cache miss: build candidates per pattern, pick the joint winner under
     the shared-pool cost model, store the plan, lower it.
+
+    ``max_cutjoin_cut=3`` (the default) emits decomposition-join
+    candidates up to the tri-join kernel tier: |cut| = 3 joins use the
+    axis-subset form (each factor spans only the cut vertices its
+    subpattern touches) and the cost model's factor-tensor budget
+    decides — per graph — whether a 3-D-factor formulation fits or the
+    selection falls back to pair-only / |cut| <= 2 / dense candidates.
 
     ``cache=False`` disables caching; ``cache=None`` uses the process
     cache.  ``apct``/``counter`` let callers (e.g. ``MiningEngine``)

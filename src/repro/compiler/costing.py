@@ -18,11 +18,15 @@ triggers the caller's fallback.
 
 Two extensions of the shared pool:
 
-* ``CutJoin`` with |cut| <= 2 is costed as the fused Pallas kernel tier
-  (``kernels.ops.cutjoin_reduce``): per-tile streaming with the
-  injectivity mask computed in-kernel, so it never pays (or gates on) an
-  O(n^|cut|) mask materialisation — only wider cuts keep the dense-mask
-  gate.
+* ``CutJoin`` with |cut| <= 3 is costed as the fused Pallas kernel tiers
+  (``kernels.ops.cutjoin_reduce`` / ``cutjoin_reduce3``): per-tile
+  streaming with the injectivity mask computed in-kernel, so it never
+  pays (or gates on) an O(n^|cut|) mask materialisation — only wider
+  cuts keep the dense-mask gate.  The tri tier's budget story gates on
+  what it *does* materialise: Σ per-factor tensor elements (axis-subset
+  factors at their own size) against the plan budget, refusing (inf)
+  formulations whose 3-D factors would not fit and thereby preferring
+  pair-tensor-only 3-cut joins on large graphs.
 * when a ``CountingEngine`` is threaded in (``counter=``), hom scalars
   and free-hom tensors it has already materialised cost zero: its
   ``(pattern, free)``-keyed ``hom_free_memo`` (and canonical-pattern
@@ -54,6 +58,15 @@ from repro.compiler.ir import Contract, CutJoin, Intersect, LocalCount, \
 
 DENSE_TILE = CM.DENSE_TILE
 
+# how much cheaper one streamed kernel-tier tile is than one dense f64
+# gather-einsum tile: the CutJoin tiers run chunked f32 broadcast
+# multiplies through the VPU (measured ~4-10x over the XLA dense join,
+# see benchmarks/bench_cutjoin.py), while Contract floors model f64
+# einsum contractions — without the discount a tri join prices like a
+# fourth contraction and the model refuses decompositions that are
+# measurably faster end-to-end
+KERNEL_STREAM_DISCOUNT = 4.0
+
 
 def _label_selectivity(labels, label_fracs) -> float:
     """Fraction of vertex tuples surviving the label mask: Π over the
@@ -74,10 +87,18 @@ def _contract_cost(node: Contract, apct, n_vertices: int,
     # estimate scaled by label selectivity
     q = free_skeleton(node.pattern) if node.free else node.pattern
     steps = H.frontier_sizes(q, node.order, free=node.free)
+    # execution-faithful per-step widths: free axes count only once a
+    # factor actually carries them (the engine's einsum never unions
+    # untouched output axes into an intermediate), so anchored
+    # flat-Möbius candidates on large graphs price by what they
+    # materialise, not by a free-axes-everywhere upper bound.  The
+    # memory gate tests the step's *output* width (what ``_contract``
+    # holds / chunks); the dense floor charges the *compute* width
+    # (output ∪ the eliminated vertex — the volume the einsum streams)
+    widths = H.elimination_widths(q, node.order, free=node.free)
     total = 0.0
     done = set(node.free)
-    for v, front in steps:
-        width = len(front | set(node.free))
+    for (v, front), (_, width) in zip(steps, widths):
         if n_vertices ** width > 4 * budget:
             return math.inf                  # PlanTooWide at execution
         done |= front
@@ -85,7 +106,7 @@ def _contract_cost(node: Contract, apct, n_vertices: int,
         cnt = (apct.query(sub) if sub.is_connected()
                else CM._disc(apct, q, done))
         cnt *= _label_selectivity(sub.labels, label_fracs)
-        floor = (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** width
+        floor = (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** (width + 1)
         total += cnt + floor
     # free output tensor materialisation
     total += (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** len(node.free)
@@ -105,6 +126,25 @@ def _materialised(node: Contract, counter) -> bool:
     return counter.has_hom(node.pattern)
 
 
+def _kernel_join_cost(cut_size: int, factor_axes, n_vertices: int,
+                      budget: int):
+    """Shared kernel-tier join pricing for CutJoin and LocalCount — the
+    two must stay in lockstep for scalar-count vs keep-axis plan
+    selection to be meaningful.  Returns inf when a |cut| >= 3 join's
+    Σ factor elements (axis-subset factors at their own size) exceed
+    the pool headroom; otherwise one pass over the tile grid plus
+    per-factor read traffic at each factor's own width, at streamed-f32
+    rates."""
+    if cut_size >= 3:
+        factor_elems = sum(n_vertices ** len(ax) for ax in factor_axes)
+        if factor_elems > 4 * budget:
+            return math.inf
+    tiles = (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** cut_size
+    traffic = sum((max(n_vertices, DENSE_TILE) / DENSE_TILE) ** len(ax)
+                  for ax in factor_axes)
+    return (tiles + traffic) / KERNEL_STREAM_DISCOUNT
+
+
 def node_cost(node, apct, n_vertices: int, budget: int = 1 << 27,
               counter=None, label_fracs=None) -> float:
     if isinstance(node, Contract):
@@ -116,29 +156,43 @@ def node_cost(node, apct, n_vertices: int, budget: int = 1 << 27,
         # clique tuple
         return apct.query(clique(node.k)) + n_vertices
     if isinstance(node, CutJoin):
-        # |cut| <= 2 runs the fused kernel tier: tiles stream through
+        # |cut| <= 3 runs the fused kernel tiers: tiles stream through
         # VMEM with the injectivity mask computed in-kernel, so only
-        # wider cuts gate on materialising the dense mask
-        if node.cut_size > 2 and n_vertices ** node.cut_size > 4 * budget:
-            return math.inf
-        join = (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** node.cut_size
-        return join * max(len(node.factors), 1)
+        # wider cuts gate on materialising the dense mask.  The tri tier
+        # instead gates on its *factor* tensors — the only thing it
+        # materialises: Σ factor elements (each n^|axes|, axis-subset
+        # factors at their own size) must fit the plan budget, so a
+        # pair-tensor-only 3-cut join stays eligible on graphs where a
+        # 3-D-factor formulation prices infinite and the selection falls
+        # back to |cut| <= 2 candidates or the dense Möbius route.
+        if node.cut_size > 3:
+            # dense-mask join beyond the kernel tiers
+            if n_vertices ** node.cut_size > 4 * budget:
+                return math.inf
+            tiles = (max(n_vertices, DENSE_TILE)
+                     / DENSE_TILE) ** node.cut_size
+            return tiles * max(len(node.factors), 1)
+        return _kernel_join_cost(node.cut_size, node.factor_axes(),
+                                 n_vertices, budget)
     if isinstance(node, ShrinkageCorrect):
         return float(len(node.corrections) + 1)
     if isinstance(node, LocalCount):
         # the partial-embedding join: the factor-product streaming cost
-        # matches CutJoin's kernel tier (|cut| <= 2 by construction), but
+        # matches CutJoin's kernel tier (|cut| <= 3 by construction), but
         # the output is a tensor over the kept axes, not a scalar — a
         # reduce-free join (keep == all axes) pays its materialisation,
         # which is what steers anchored queries to keep-axis plans when
-        # both exist.  Corrections add one streamed tensor each.
+        # both exist.  Corrections add one streamed tensor each.  3-cut
+        # local plans gate on their factor tensors like the tri-join
+        # (full-cut factors, so anchored 3-cut vectors only commit where
+        # three n³ factors genuinely fit the budget).
         out_elems = n_vertices ** len(node.keep)
         if out_elems > 4 * budget:
             return math.inf                  # output itself too wide
-        join = (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** node.cut_size
+        join = _kernel_join_cost(node.cut_size, node.factor_axes(),
+                                 n_vertices, budget)
         out = (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** len(node.keep)
-        return join * max(len(node.factors), 1) + out \
-            + float(len(node.corrections))
+        return join + out + float(len(node.corrections))
     if isinstance(node, MobiusCombine):
         return float(len(node.terms))
     raise TypeError(type(node))

@@ -19,6 +19,13 @@ Two candidate styles exist per cutting set:
       inj(p) = Σ_{e_c} Π_i M_i(e_c) − Σ_σ mult(σ)·inj(p/σ)
   where σ ranges over cross-component merging partitions (§2.4).
 
+|cut| >= 3 cutting sets emit a third style, ``decomposed-subset`` (the
+tri-join kernel tier's form): each subpattern keeps only the cut
+vertices adjacent to its component, so its factor tensor spans a
+*subset* of the cut axes — recorded in ``CutJoin.axes`` — with cut-cut
+edges as standalone pair factors and the weakened injectivity repaired
+by the generalised shrinkage (``quotient.shrinkage_patterns_subset``).
+
 Vertex labels are a constraint, not an eligibility gate: labelled
 patterns generate the same candidate space.  Free-hom contractions pack
 the real vertex label with the cut-rank marker into one
@@ -158,9 +165,20 @@ def decomposed_candidate(p: Pattern, cut: frozenset, *, graph_n: int,
                          max_cut: int = 2) -> Optional[Candidate]:
     """CutJoin/ShrinkageCorrect plan for one cutting set, or None when
     ineligible (wide cut, or cut tensor over budget).  Labelled patterns
-    decompose like unlabelled ones: labels live inside the factors."""
+    decompose like unlabelled ones: labels live inside the factors.
+
+    |cut| <= 2 keeps the legacy full-cut form (every factor spans the
+    whole cut); |cut| >= 3 emits the axis-subset form — see
+    ``_subset_decomposed_candidate`` — whose per-factor tensor widths
+    the cost model prices against the plan budget (the frontend no
+    longer hard-gates on ``graph_n ** k``: a 3-cut join whose factors
+    are all pair tensors never materialises n³ anything)."""
     k = len(cut)
-    if k > max_cut or graph_n ** k > budget:
+    if k > max_cut:
+        return None
+    if k >= 3:
+        return _subset_decomposed_candidate(p, cut)
+    if graph_n ** k > budget:
         return None
     cand = Candidate(p, cut, "decomposed")
     factors = []
@@ -182,6 +200,67 @@ def decomposed_candidate(p: Pattern, cut: frozenset, *, graph_n: int,
     return cand
 
 
+def _subset_decomposed_candidate(p: Pattern, cut: frozenset) \
+        -> Optional[Candidate]:
+    """The axis-subset decomposition join (the |cut| >= 3 tier).
+
+    Each component's subpattern is the component plus only the cut
+    vertices *adjacent* to it, so its free-hom factor spans just those
+    cut axes — a pair tensor for a component wedged between two cut
+    vertices, never an unnecessary n^|cut| expansion.  Edges between
+    cut vertices become their own pair factors (the induced 2-vertex
+    pattern with both vertices free: the label-masked adjacency), which
+    also keeps every cut axis covered for connected patterns.  The two
+    injectivity constraints this join no longer enforces — collisions
+    across components and collisions of a component vertex with a
+    *distant* (non-adjacent) cut vertex — are exactly the generalised
+    shrinkage terms ``shrinkage_patterns_subset`` subtracts, so
+
+        inj(p) = Σ_{e_c pairwise distinct} Π_i M_i(e_c)
+                 − Σ_σ mult(σ) · inj(p/σ)
+
+    holds exactly (multiplicity 1 per allowed collision partition).
+    With every component adjacent to the whole cut this degenerates to
+    the full-cut form (all factors |cut|-dimensional, classic
+    shrinkage), which is what e.g. a 5-clique minus an edge needs."""
+    from repro.core.quotient import shrinkage_patterns_subset
+    k = len(cut)
+    cut_list = sorted(cut)
+    rank = {c: i for i, c in enumerate(cut_list)}
+    adj = p.adj()
+    cand = Candidate(p, cut, "decomposed-subset")
+    factors, axes = [], []
+    for comp in p.components_without(cut):
+        adjc = sorted(c for c in cut if adj[c] & comp)
+        vs = sorted(comp | set(adjc))
+        vmap = {v: i for i, v in enumerate(vs)}
+        sub = p.induced(vs)
+        cutpos = tuple(vmap[c] for c in adjc)
+        terms = _free_hom_terms(cand, sub, cutpos)
+        if not terms:
+            return None
+        factors.append(terms)
+        axes.append(tuple(rank[c] for c in adjc))
+    for (u, v) in sorted(p.edges):
+        if u in cut and v in cut:
+            terms = _free_hom_terms(cand, p.induced((u, v)), (0, 1))
+            if not terms:
+                return None
+            factors.append(terms)
+            axes.append((rank[min(u, v)], rank[max(u, v)]))
+    cut_sig = "-".join(map(str, cut_list))
+    join = CutJoin(f"cutjoin:{pattern_key(p)}:{cut_sig}", k,
+                   tuple(factors), tuple(axes))
+    join_key = cand._add(join)
+    corrections = []
+    for q, mult in shrinkage_patterns_subset(p, cut):
+        corrections.append((float(mult), _inj_terms(cand, q)))
+    out = ShrinkageCorrect(f"cnt:{pattern_key(p)}:{cut_sig}", join_key,
+                           tuple(corrections), divisor=p.aut_order())
+    cand.out_key = cand._add(out)
+    return cand
+
+
 # -- partial-embedding (local-count) candidates ------------------------------------
 
 def local_candidate(p: Pattern, cut: frozenset, *, graph_n: int,
@@ -195,9 +274,12 @@ def local_candidate(p: Pattern, cut: frozenset, *, graph_n: int,
     axes are summed away (the keep-axis kernel tier) and the shrinkage
     corrections are emitted anchored at the anchor alone, so they stay
     vector-sized.  None when ineligible (wide cut, over-budget tensor,
-    or anchor outside the cut)."""
+    or anchor outside the cut).  |cut| = 3 plans keep the full-cut
+    factor form (axes unannotated): anchored reads run the keep-axis
+    tri-join kernel, and costing prices the 3-D factor materialisation
+    against the plan budget, so they only commit where they fit."""
     k = len(cut)
-    if k > min(max_cut, 2) or graph_n ** k > budget:
+    if k > min(max_cut, 3) or graph_n ** k > budget:
         return None
     if anchor is not None and anchor not in cut:
         return None
@@ -286,7 +368,7 @@ def domain_candidate(p: Pattern) -> Candidate:
 # -- search space / assembly ------------------------------------------------------
 
 def pattern_candidates(p: Pattern, *, graph_n: int, budget: int = 1 << 27,
-                       max_cutjoin_cut: int = 2) -> List[Candidate]:
+                       max_cutjoin_cut: int = 3) -> List[Candidate]:
     """The full candidate space for one pattern, direct plan first."""
     out = [direct_candidate(p)]
     for cut in cutting_sets(p):

@@ -69,7 +69,11 @@ Term = Tuple[float, str]                    # (coefficient, node key)
 # v4: LocalCount nodes (partial-embedding outputs) + "loc:"-prefixed
 # entries in Plan.outputs — v3 readers would strip-and-serve them as
 # count plans, so they must miss instead
-PLAN_FORMAT_VERSION = 4
+# v5: CutJoin/LocalCount factor axis-subset annotation (``axes``) — the
+# |cut| >= 3 tier's axis-subset decomposition joins are meaningless to a
+# v4 reader (it would expand every factor over the full cut), so they
+# must miss instead
+PLAN_FORMAT_VERSION = 5
 
 
 # -- pattern (de)serialisation ---------------------------------------------------
@@ -184,18 +188,32 @@ class MobiusCombine:
 @dataclass(frozen=True)
 class CutJoin:
     """Σ over injective cut tuples of Π_i M_i, with M_i = Σ coeff ·
-    tensor(ref) (each ref a free-vertex Contract).  ``cut_size`` axes of
-    each factor tensor are aligned by cut rank."""
+    tensor(ref) (each ref a free-vertex Contract).  ``axes`` annotates,
+    per factor, the sorted subset of cut ranks the factor's tensor
+    spans (None = every factor spans the full cut, the |cut| <= 2
+    legacy form): axis-subset factors broadcast along the missing cut
+    axes inside the join — the |cut| >= 3 tier's pair/vector factors
+    stay at their own size instead of expanding to n^|cut|."""
     key: str
     cut_size: int
     factors: Tuple[Tuple[Term, ...], ...]
+    axes: Optional[Tuple[Tuple[int, ...], ...]] = None
+
+    def factor_axes(self) -> tuple:
+        """Per-factor cut-rank subsets, the full cut when unannotated."""
+        if self.axes is not None:
+            return self.axes
+        return tuple(tuple(range(self.cut_size)) for _ in self.factors)
 
     def refs(self):
         return tuple(r for f in self.factors for _, r in f)
 
     def to_dict(self) -> dict:
-        return {"op": "cutjoin", "key": self.key, "cut_size": self.cut_size,
-                "factors": [[[c, r] for c, r in f] for f in self.factors]}
+        d = {"op": "cutjoin", "key": self.key, "cut_size": self.cut_size,
+             "factors": [[[c, r] for c, r in f] for f in self.factors]}
+        if self.axes is not None:
+            d["axes"] = [list(a) for a in self.axes]
+        return d
 
 
 @dataclass(frozen=True)
@@ -229,22 +247,33 @@ class LocalCount:
     and each correction is a free-hom tensor over the ``keep`` axes only
     (anchored shrinkage terms).  ``keep`` lists the surviving cut axes in
     output order: the full tuple is the reduce-free tensor, a single
-    axis sums the others away in-kernel (the keep-axis Pallas tier)."""
+    axis sums the others away in-kernel (the keep-axis Pallas tier).
+    ``axes`` mirrors ``CutJoin.axes``: per-factor cut-rank subsets for
+    axis-subset factors (None = full cut)."""
     key: str
     cut_size: int
     keep: Tuple[int, ...]
     factors: Tuple[Tuple[Term, ...], ...]
     corrections: Tuple[Term, ...] = ()
+    axes: Optional[Tuple[Tuple[int, ...], ...]] = None
+
+    def factor_axes(self) -> tuple:
+        if self.axes is not None:
+            return self.axes
+        return tuple(tuple(range(self.cut_size)) for _ in self.factors)
 
     def refs(self):
         return tuple(r for f in self.factors for _, r in f) + \
             tuple(r for _, r in self.corrections)
 
     def to_dict(self) -> dict:
-        return {"op": "local", "key": self.key, "cut_size": self.cut_size,
-                "keep": list(self.keep),
-                "factors": [[[c, r] for c, r in f] for f in self.factors],
-                "corrections": [[c, r] for c, r in self.corrections]}
+        d = {"op": "local", "key": self.key, "cut_size": self.cut_size,
+             "keep": list(self.keep),
+             "factors": [[[c, r] for c, r in f] for f in self.factors],
+             "corrections": [[c, r] for c, r in self.corrections]}
+        if self.axes is not None:
+            d["axes"] = [list(a) for a in self.axes]
+        return d
 
 
 _OPS = {"contract": Contract, "intersect": Intersect, "mobius": MobiusCombine,
@@ -266,7 +295,9 @@ def op_from_dict(d: dict):
     if kind == "cutjoin":
         return CutJoin(d["key"], d["cut_size"],
                        tuple(tuple((c, r) for c, r in f)
-                             for f in d["factors"]))
+                             for f in d["factors"]),
+                       tuple(tuple(a) for a in d["axes"])
+                       if d.get("axes") is not None else None)
     if kind == "shrinkage":
         return ShrinkageCorrect(d["key"], d["base"],
                                 tuple((m, r) for m, r in d["corrections"]),
@@ -275,7 +306,9 @@ def op_from_dict(d: dict):
         return LocalCount(d["key"], d["cut_size"], tuple(d["keep"]),
                           tuple(tuple((c, r) for c, r in f)
                                 for f in d["factors"]),
-                          tuple((c, r) for c, r in d["corrections"]))
+                          tuple((c, r) for c, r in d["corrections"]),
+                          tuple(tuple(a) for a in d["axes"])
+                          if d.get("axes") is not None else None)
     raise ValueError(f"unknown op kind {kind!r}")
 
 

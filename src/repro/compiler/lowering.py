@@ -9,20 +9,24 @@ evaluates nodes on demand with per-node memoisation:
                     ``triangle_count`` kernel when ``use_pallas`` is set
                     (k == 3, f32 MXU path; inputs zero-padded to the tile
                     multiple, so any ``n`` works);
-* ``CutJoin``    -> the fused Pallas kernel tier for |cut| <= 2
-                    (``kernels.ops.cutjoin_reduce``): a k-factor masked
-                    product-reduce whose injectivity mask is derived
-                    in-kernel from tile indices — no O(n^|cut|) mask is
+* ``CutJoin``    -> the fused Pallas kernel tier for |cut| <= 3: the
+                    k-factor masked product-reduce (``kernels.ops.
+                    cutjoin_reduce``) for |cut| <= 2, the tiled tri-join
+                    (``cutjoin_reduce3``) for |cut| = 3 — axis-subset
+                    factors broadcast per tile, pairwise-distinct mask
+                    from tile iotas, so no O(n^|cut|) mask is ever
                     materialised — with chunked f32 tile partials summed
                     on the host in f64.  |cut| = 1 takes the vector fast
                     path.  Chunk sizes come from an exactness guard
-                    (``cutjoin_exact_block``): integer counts are only
-                    routed to f32 chunks the bound proves exact.  The
-                    jitted XLA ``_join_reduce`` (dense factor stack x
-                    explicit mask, f64) remains the fallback for wider
-                    cuts / over-bound magnitudes / ``cutjoin_kernel=
-                    False``, and the interpret-mode oracle the kernel is
-                    tested against;
+                    (``cutjoin_exact_block``) fed by per-factor max
+                    magnitudes cached on the plan: integer counts are
+                    only routed to f32 chunks the bound proves exact.
+                    The jitted XLA ``_join_reduce`` (dense factor stack
+                    x explicit mask, f64, axis-subset factors broadcast
+                    dense) remains the fallback for wider cuts /
+                    over-bound magnitudes / ``cutjoin_kernel=False``,
+                    and the interpret-mode oracle the kernel is tested
+                    against;
 * the combine ops run on host scalars.
 
 Node values memoise per plan *and* feed the engine's hom memo, so
@@ -60,6 +64,16 @@ def _join_keep(stack, axis):
     return jnp.sum(prod * off, axis=1 - axis)
 
 
+@functools.partial(jax.jit, static_argnames=("keep",))
+def _join_keep3(stack, mask, keep):
+    """Keep-axis |cut| = 3 XLA fallback/oracle: Π of stacked (n, n, n)
+    factors under the dense pairwise-distinct mask, summed over the two
+    non-kept axes (f64 under x64) — the tri-join kernel's bit-for-bit
+    reference."""
+    prod = jnp.prod(stack, axis=0) * mask
+    return jnp.sum(prod, axis=tuple(a for a in range(3) if a != keep))
+
+
 class CompiledPlan:
     """An executable application: one plan, one graph."""
 
@@ -76,6 +90,7 @@ class CompiledPlan:
         self._values: Dict[str, object] = {}
         self._masks: Dict[int, np.ndarray] = {}
         self._factors: Dict[tuple, np.ndarray] = {}
+        self._factor_maxes: Dict[tuple, float] = {}
         self.stats = {"node_evals": 0, "node_hits": 0,
                       "exists_early_exits": 0}
 
@@ -136,8 +151,8 @@ class CompiledPlan:
         nk = self.plan.outputs.get(local_key(p))
         node = self.plan.nodes.get(nk) if nk is not None else None
         if isinstance(node, LocalCount):
-            for terms in node.factors:
-                if not np.any(np.abs(self._combine(terms, node.cut_size))
+            for terms, ax in zip(node.factors, node.factor_axes()):
+                if not np.any(np.abs(self._combine(terms, len(ax)))
                               > 0.5):
                     self.stats["exists_early_exits"] += 1
                     return False
@@ -234,17 +249,72 @@ class CompiledPlan:
             self._factors[key] = M
         return M
 
+    def _factor_max(self, terms, ndim: int, M: np.ndarray) -> float:
+        """max|M| for the factor combined from ``terms``, memoised under
+        the same key as ``_combine``: the ``exact_block`` guard needs
+        every factor's max magnitude on every kernel execution, and
+        re-scanning long-lived serving factors would force a full
+        device→host reduction per query."""
+        key = (terms, ndim)
+        v = self._factor_maxes.get(key)
+        if v is None:
+            v = float(np.abs(np.asarray(M)).max()) if M.size else 0.0
+            self._factor_maxes[key] = v
+        return v
+
+    def _join_factors(self, node):
+        """(factors, axes, maxes) of a CutJoin/LocalCount node: each
+        factor combined over its *own* axis subset (axis-subset factors
+        stay at their own size), with the cached max magnitudes the
+        exactness guard consumes."""
+        axes = node.factor_axes()
+        Ms, maxes = [], []
+        for terms, ax in zip(node.factors, axes):
+            M = self._combine(terms, len(ax))
+            Ms.append(M)
+            maxes.append(self._factor_max(terms, len(ax), M))
+        return Ms, axes, maxes
+
+    def _dense_expand(self, Ms, axes, k: int):
+        """Broadcast axis-subset factors to the full (n,)*k cut grid —
+        the XLA dense fallback/oracle only; the kernel tier never calls
+        this.  Costing admits |cut| >= 3 joins by their *factor* sizes
+        (pair-only formulations stay eligible where n^k doesn't fit),
+        so the dense fallback must refuse rather than materialise the
+        n^k stack + mask the budget never approved — ``PlanTooWide``
+        sends callers down their legacy fallback path."""
+        from repro.core.homomorphism import PlanTooWide
+        n = self.graph.n
+        if k >= 3 and n ** k > 4 * self.counter.budget:
+            raise PlanTooWide(
+                f"dense |cut| = {k} fallback would materialise "
+                f"{n ** k:.2e}-element factors/mask beyond the cap "
+                f"(kernel guard refused or cutjoin_kernel=False)")
+        out = []
+        for M, ax in zip(Ms, axes):
+            if len(ax) == k:
+                out.append(M)
+                continue
+            shape = tuple(n if a in ax else 1 for a in range(k))
+            out.append(np.broadcast_to(np.asarray(M).reshape(shape),
+                                       (n,) * k))
+        return out
+
     def _eval_cutjoin(self, node: CutJoin) -> float:
-        Ms = [self._combine(terms, node.cut_size)
-              for terms in node.factors]
-        if self.cutjoin_kernel and node.cut_size <= 2:
+        Ms, axes, maxes = self._join_factors(node)
+        if self.cutjoin_kernel and node.cut_size <= 3:
             from repro.kernels import ops
-            block = ops.cutjoin_exact_block(Ms)
+            block = ops.cutjoin_exact_block(Ms, maxes=maxes)
             if block is not None:            # f32 chunks provably exact
-                return ops.cutjoin_reduce(Ms, distinct=node.cut_size >= 2,
-                                          bm=block, bn=block)
+                if node.cut_size <= 2:
+                    return ops.cutjoin_reduce(Ms,
+                                              distinct=node.cut_size >= 2,
+                                              bm=block, bn=block)
+                return ops.cutjoin_reduce3(Ms, axes, n=self.graph.n,
+                                           block=block)
             # factor magnitudes exceed what chunked f32 can represent
             # exactly: fall through to the f64 XLA join
+        Ms = self._dense_expand(Ms, axes, node.cut_size)
         if node.cut_size >= 2:               # injectivity of the cut tuple
             Ms.append(self._mask(node.cut_size))
         with self.counter._x64():
@@ -262,35 +332,59 @@ class CompiledPlan:
         guard admits the factors, else the jitted f64 XLA mask-and-sum
         (also the kernel's bit-for-bit oracle); corrections are already
         vector-sized and subtract after the reduce."""
-        n = self.graph.n
-        Ms = [self._combine(terms, node.cut_size)
-              for terms in node.factors]
+        Ms, axes, maxes = self._join_factors(node)
         if node.cut_size == 1 or len(node.keep) == node.cut_size:
-            out = Ms[0].copy()
-            for M in Ms[1:]:
+            dense = self._dense_expand(Ms, axes, node.cut_size)
+            out = np.array(dense[0], np.float64)
+            for M in dense[1:]:
                 out *= M
             if node.corrections:
                 out -= self._combine(node.corrections, len(node.keep))
-            if node.cut_size >= 2:           # injectivity of the cut tuple
-                np.fill_diagonal(out, 0.0)
+            self._zero_collisions(out)       # injectivity of the cut tuple
             return out
-        # keep-axis reduce: |cut| = 2, one surviving axis
+        # keep-axis reduce: |cut| in {2, 3}, one surviving axis
         axis = node.keep[0]
         out = None
         if self.cutjoin_kernel:
             from repro.kernels import ops
-            block = ops.cutjoin_exact_block(Ms)
+            block = ops.cutjoin_exact_block(Ms, maxes=maxes)
             if block is not None:            # f32 chunks provably exact
-                out = ops.cutjoin_reduce_keep(Ms, keep=axis,
-                                              bm=block, bn=block)
+                if node.cut_size == 2:
+                    out = ops.cutjoin_reduce_keep(Ms, keep=axis,
+                                                  bm=block, bn=block)
+                else:
+                    out = ops.cutjoin_reduce3_keep(Ms, axes, keep=axis,
+                                                   n=self.graph.n,
+                                                   block=block)
         if out is None:
+            dense = self._dense_expand(Ms, axes, node.cut_size)
             with self.counter._x64():
-                out = np.asarray(_join_keep(
-                    jnp.stack([jnp.asarray(M) for M in Ms]), axis),
-                    np.float64)
+                stack = jnp.stack([jnp.asarray(M) for M in dense])
+                if node.cut_size == 2:
+                    out = np.asarray(_join_keep(stack, axis), np.float64)
+                else:
+                    out = np.asarray(
+                        _join_keep3(stack, jnp.asarray(self._mask(3)),
+                                    axis), np.float64)
         if node.corrections:
             out = out - self._combine(node.corrections, 1)
         return out
+
+    def _zero_collisions(self, out: np.ndarray):
+        """Zero every entry whose index tuple repeats a value — the cut
+        injectivity mask applied in place to a reduce-free local tensor
+        (ndim 2: the diagonal; ndim 3: the three pairwise-equal planes;
+        ndim 1: nothing — a single cut vertex is always injective)."""
+        if out.ndim == 1:
+            return
+        if out.ndim == 2:
+            np.fill_diagonal(out, 0.0)
+            return
+        assert out.ndim == 3
+        idx = np.arange(out.shape[0])
+        out[idx, idx, :] = 0.0
+        out[idx, :, idx] = 0.0
+        out[:, idx, idx] = 0.0
 
     def _mask(self, k: int) -> np.ndarray:
         """Π_{a<b} [x_a != x_b] over a (n,)*k grid."""

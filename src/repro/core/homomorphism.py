@@ -58,6 +58,36 @@ def greedy_plan(p: Pattern, free: tuple = ()) -> tuple:
     return tuple(order)
 
 
+def elimination_widths(p: Pattern, order: tuple, free: tuple = ()) -> list:
+    """Actual per-step intermediate widths of ``hom_count``: simulate the
+    factor index sets exactly as the engine contracts them — eliminating
+    ``v`` joins only the factors that *touch* v, so a free output axis
+    widens a step only once some factor actually carries it (it enters
+    through an edge to a free vertex, then rides the produced
+    intermediate).  Returns [(v, out_width)] aligned with
+    ``frontier_sizes`` (free vertices skipped).
+
+    This is the execution-faithful width the memory gate should test:
+    ``frontier_sizes``-based costing used to union *every* free axis
+    into *every* step, an upper bound that priced anchored flat-Möbius
+    candidates infinite on large graphs even though the real einsums
+    never materialise those axes early."""
+    factors = [frozenset(e) for e in sorted(p.edges)]
+    covered = set().union(*factors) if factors else set()
+    factors += [frozenset({v}) for v in range(p.n) if v not in covered]
+    out = []
+    for v in order:
+        if v in free:
+            continue
+        involved = [s for s in factors if v in s]
+        rest = [s for s in factors if v not in s]
+        out_idx = frozenset().union(*involved) - {v} if involved \
+            else frozenset()
+        out.append((v, len(out_idx)))
+        factors = rest + [out_idx]
+    return out
+
+
 def frontier_sizes(p: Pattern, order: tuple, free: tuple = ()) -> list:
     """Width of each elimination step (ndim of the intermediate), and the
     processed-subpattern vertex sets (for the APCT cost model)."""

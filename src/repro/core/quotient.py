@@ -25,6 +25,7 @@ approximations.
 """
 from __future__ import annotations
 
+import itertools
 import math
 from functools import lru_cache
 
@@ -107,6 +108,61 @@ def shrinkage_quotients_with_maps(p: Pattern, cut: frozenset) -> list:
             continue
         out.append((q, blk))
     return out
+
+
+@lru_cache(maxsize=10_000)
+def shrinkage_patterns_subset(p: Pattern, cut: frozenset) -> list:
+    """Shrinkage patterns of the *axis-subset* decomposition, where each
+    subpattern contains only the cut vertices adjacent to its component
+    (the |cut| >= 3 tier's pair/vector factors).  The join then enforces
+    injectivity only (a) among cut vertices (the kernel mask) and (b)
+    within each component ∪ its adjacent cut vertices, so the allowed
+    collisions — each contributing one inj(p/σ) to subtract — are:
+
+      * vertices of different components (classic shrinkage);
+      * a component vertex with a cut vertex *not* adjacent to that
+        component (the distant-cut collisions the full-cut form folds
+        into its factors).
+
+    Enumerates partitions of all of V(p) whose blocks contain at most
+    one cut vertex and only pairwise-allowed collisions; multiplicity 1
+    per partition, deduplicated by canonical quotient.  Merging adjacent
+    vertices never arises (cross-component pairs and distant-cut pairs
+    are non-adjacent by construction), and label-conflicting merges are
+    dropped as identically zero.  With every component adjacent to the
+    whole cut this reduces exactly to ``shrinkage_patterns``."""
+    comps = p.components_without(cut)
+    adj = p.adj()
+    comp_of = {}
+    adjc = []
+    for ci, comp in enumerate(comps):
+        for v in comp:
+            comp_of[v] = ci
+        adjc.append(frozenset(c for c in cut if adj[c] & comp))
+
+    def allowed(u, v):
+        cu, cv = u in cut, v in cut
+        if cu and cv:
+            return False                    # the kernel mask keeps these
+        if cu or cv:
+            c, w = (u, v) if cu else (v, u)
+            return c not in adjc[comp_of[w]]
+        return comp_of[u] != comp_of[v]
+
+    acc = {}
+    for sigma in partitions(tuple(range(p.n))):
+        nontrivial = [b for b in sigma if len(b) > 1]
+        if not nontrivial:
+            continue
+        if not all(allowed(u, v) for b in nontrivial
+                   for u, v in itertools.combinations(b, 2)):
+            continue
+        q = p.quotient(sigma)
+        if q is None:
+            continue                        # label conflict: zero
+        c = q.canonical()
+        acc[c] = acc.get(c, 0) + 1
+    return sorted(acc.items(), key=lambda t: (t[0].n, t[0].m))
 
 
 def shrinkage_patterns(p: Pattern, cut: frozenset) -> list:

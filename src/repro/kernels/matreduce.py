@@ -21,6 +21,28 @@ Two primitives live here:
                  every chunk partial fits f32's 2^24 integer range —
                  ``exact_block`` picks the chunk size that provably does.
 
+``tri_reduce``   the |cut| = 3 tier: Σ_{x≠y, y≠z, x≠z} Π_i F_i over a
+                 3-D tile grid, where each factor touches a *subset* of
+                 the three cut axes — (n,) vectors, (n, n) pair tensors
+                 (the common case: an axis-subset decomposition factor
+                 spans only the cut vertices its subpattern contains),
+                 or full (n, n, n) tensors.  Factors are stored with
+                 size-1 broadcast dims on the axes they miss (a free
+                 reshape — nothing is expanded in HBM) and broadcast
+                 per (bm, bn, bk) tile inside the kernel; the pairwise-
+                 distinct mask comes from three broadcasted tile iotas,
+                 so no O(n³) mask is ever materialised.  Each grid tile
+                 writes a (bm, bn) sheet of f32 partials, each
+                 accumulating bk cells — the same chunk-size bound
+                 ``exact_block`` certifies — and the host reduces the
+                 (M, N, gk) partial tensor in f64.
+
+``tri_reduce_keep``  the keep-axis |cut| = 3 variant behind 3-cut
+                 ``LocalCount`` plans: out[x] = Σ_{y,z} [distinct] ·
+                 Π_i F_i — the factors are transposed host-side so the
+                 kept axis leads, then the same kernel runs and the host
+                 reduces the non-kept partial axes per row in f64.
+
 ``prod_reduce_keep``  the keep-axis variant behind ``LocalCount`` plans
                  (the partial-embedding API): out[x] = Σ_{y≠x} Π_i
                  F_i[x, y] — the same masked product but with one cut
@@ -232,21 +254,163 @@ def prod_reduce_keep(factors, *, keep: int = 0, distinct: bool = True,
     return np.asarray(tiles, np.float64).sum(axis=1)[:n]
 
 
+# -- tri_reduce: the |cut| = 3 tiled tri-join --------------------------------------
+
+def _trijoin_kernel(*refs, nf, masked, bm, bn, bk):
+    """One (bm, bn, bk) tile of Σ [x,y,z pairwise distinct] · Π_i F_i.
+    Factor tiles carry size-1 dims on absent axes and broadcast against
+    the full tile shape (never expanded in memory); the pairwise-
+    distinct mask is three tile-iota comparisons.  The tile writes a
+    (bm, bn) sheet of f32 partials, each accumulating bk cells — the
+    chunk bound ``exact_block`` certifies."""
+    out_ref = refs[-1]
+    prod = refs[0][...]
+    for f in range(1, nf):
+        prod = prod * refs[f][...]
+    if masked:
+        i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+        shape = (bm, bn, bk)
+        x = jax.lax.broadcasted_iota(jnp.int32, shape, 0) + i * bm
+        y = jax.lax.broadcasted_iota(jnp.int32, shape, 1) + j * bn
+        z = jax.lax.broadcasted_iota(jnp.int32, shape, 2) + k * bk
+        bad = (x == y) | (x == z) | (y == z)
+        prod = jnp.where(bad, jnp.float32(0.0), prod)
+    else:
+        prod = jnp.broadcast_to(prod, (bm, bn, bk))
+    out_ref[:, :, 0] = jnp.sum(prod, axis=2)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("present", "distinct", "bm", "bn",
+                                    "bk", "interpret"))
+def _trijoin_tiles(*stack, present, distinct, bm, bn, bk, interpret):
+    """``stack``: one 3-D array per factor, shape (M|1, N|1, K|1) with
+    size-1 dims on the axes ``present[f]`` misses.  Returns the (M, N,
+    gk) f32 partial tensor (gk = K // bk column-tile partials)."""
+    M = max(s.shape[0] for s in stack)
+    N = max(s.shape[1] for s in stack)
+    K = max(s.shape[2] for s in stack)
+    grid = (M // bm, N // bn, K // bk)
+
+    def spec(axes):
+        block = (bm if 0 in axes else 1, bn if 1 in axes else 1,
+                 bk if 2 in axes else 1)
+        return pl.BlockSpec(
+            block, lambda i, j, k, axes=axes: (i if 0 in axes else 0,
+                                               j if 1 in axes else 0,
+                                               k if 2 in axes else 0))
+
+    kern = functools.partial(_trijoin_kernel, nf=len(stack),
+                             masked=distinct, bm=bm, bn=bn, bk=bk)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[spec(axes) for axes in present],
+        out_specs=pl.BlockSpec((bm, bn, 1), lambda i, j, k: (i, j, k)),
+        out_shape=jax.ShapeDtypeStruct((M, N, grid[2]), jnp.float32),
+        interpret=interpret,
+    )(*stack)
+
+
+def _tri_normalise(factors, axes, n: int, b: int):
+    """Cast each factor to f32, reshape to 3-D with size-1 dims on its
+    absent axes (a free view — axis-subset factors are broadcast per
+    tile, never expanded), zero-pad present axes to the tile multiple,
+    and inject a ones-vector on any axis no factor covers (zero-padded,
+    so padding never contributes even on uncovered axes)."""
+    covered = set()
+    stacked, present = [], []
+    for F, ax in zip(factors, axes):
+        ax = tuple(ax)
+        assert ax == tuple(sorted(set(ax))) and set(ax) <= {0, 1, 2}
+        F = jnp.asarray(F, jnp.float32)
+        assert F.ndim == len(ax) and all(s == n for s in F.shape), \
+            (F.shape, ax, n)
+        covered |= set(ax)
+        shape = tuple(n if a in ax else 1 for a in range(3))
+        F = F.reshape(shape)
+        F = _pad_to(F, tuple(b if a in ax else 1 for a in range(3)))
+        stacked.append(F)
+        present.append(ax)
+    for a in sorted({0, 1, 2} - covered):
+        ones = _pad_to(jnp.ones((n,), jnp.float32), (b,))
+        shape = tuple(-1 if x == a else 1 for x in range(3))
+        stacked.append(ones.reshape(shape))
+        present.append((a,))
+    return stacked, tuple(present)
+
+
+def tri_reduce(factors, axes, *, n: int, distinct: bool = True,
+               bm: int = 128, bn: int = 128, bk: int = 128,
+               interpret: bool = False) -> float:
+    """Σ over (pairwise-distinct) index triples of Π_i F_i, where factor
+    i spans only the cut axes ``axes[i]`` (a sorted subset of (0, 1, 2))
+    and broadcasts along the rest.
+
+    The |cut| = 3 decomposition join.  The injectivity mask is derived
+    in-kernel from tile indices — nothing O(n³) is materialised beyond
+    whatever genuinely 3-D factors the caller already holds; axis-subset
+    factors stay at their own size.  Per-tile (bm, bn) f32 partials each
+    accumulate bk cells, so ``exact_block`` certifies the same chunk
+    bound as the pair tier with b = bk; the host reduces the partial
+    tensor in f64."""
+    b = min(bm, bn, bk, max(n, 1))
+    stacked, present = _tri_normalise(factors, axes, n, b)
+    tiles = _trijoin_tiles(*stacked, present=present, distinct=distinct,
+                           bm=b, bn=b, bk=b, interpret=interpret)
+    return float(np.asarray(tiles, np.float64).sum())
+
+
+def tri_reduce_keep(factors, axes, *, keep: int, n: int,
+                    distinct: bool = True, bm: int = 128, bn: int = 128,
+                    bk: int = 128,
+                    interpret: bool = False) -> np.ndarray:
+    """Keep-axis tri-join: out[w] = Σ over the other two (pairwise-
+    distinct) axes of Π_i F_i — the anchored partial-embedding vector of
+    a |cut| = 3 plan.  ``keep`` picks the surviving axis; factors are
+    transposed host-side so it leads (free for axis-subset factors —
+    only their axis labels move), then the same kernel runs and the
+    host sums the non-kept partial axes per row in f64."""
+    assert keep in (0, 1, 2)
+    perm = (keep,) + tuple(a for a in range(3) if a != keep)
+    rank = {a: i for i, a in enumerate(perm)}
+    paxes = []
+    pfactors = []
+    for F, ax in zip(factors, axes):
+        ax = tuple(ax)
+        new = tuple(sorted(rank[a] for a in ax))
+        order = tuple(ax.index(perm[a]) for a in new)
+        pfactors.append(np.transpose(np.asarray(F), order)
+                        if order != tuple(range(len(ax))) else F)
+        paxes.append(new)
+    b = min(bm, bn, bk, max(n, 1))
+    stacked, present = _tri_normalise(pfactors, paxes, n, b)
+    tiles = _trijoin_tiles(*stacked, present=present, distinct=distinct,
+                           bm=b, bn=b, bk=b, interpret=interpret)
+    return np.asarray(tiles, np.float64).sum(axis=(1, 2))[:n]
+
+
 EXACT_LIMIT = float(1 << 24)                 # f32 exact-integer range
 
 
-def exact_block(factors, max_block: int = 1024, min_block: int = 8):
+def exact_block(factors, max_block: int = 1024, min_block: int = 8,
+                maxes=None):
     """Largest power-of-two chunk size whose f32 partial sums stay exact
     for integer-valued ``factors``.  A chunk accumulates ``b`` cells
     (per-column partials of a (b, bn) tile for 2-D factors, one bn-wide
-    scalar for 1-D), so every partial is an integer bounded by
+    scalar for 1-D, the bk depth of one (bm, bn) partial sheet for the
+    tri tier), so every partial is an integer bounded by
     (Π_i max|F_i|) · b, and integers up to 2^24 are exactly
-    representable in f32.  Returns None when even a ``min_block`` chunk
-    cannot guarantee exactness — callers should take an f64 path
-    instead."""
+    representable in f32.  ``maxes`` supplies precomputed per-factor max
+    magnitudes (serving plans cache them — see ``CompiledPlan``) so
+    repeated executions skip the full-tensor scan.  Returns None when
+    even a ``min_block`` chunk cannot guarantee exactness — callers
+    should take an f64 path instead."""
     maxprod = 1.0
-    for F in factors:
-        maxprod *= float(np.abs(np.asarray(F)).max())
+    if maxes is None:
+        maxes = [float(np.abs(np.asarray(F)).max()) for F in factors]
+    for m in maxes:
+        maxprod *= float(m)
     b = max_block
     while b >= min_block:
         if maxprod * b <= EXACT_LIMIT:

@@ -104,13 +104,53 @@ def cutjoin_reduce_keep(factors, *, keep=0, distinct=True, bm=None,
                                 bm=bm, bn=bn, interpret=interpret)
 
 
-def cutjoin_exact_block(factors, *, interpret=None):
-    """Chunk size for which ``cutjoin_reduce`` is exact on the given
-    integer-valued factors, or None when no f32 chunking can guarantee
-    it (callers should use an f64 path).  See ``matreduce.exact_block``.
+def cutjoin_reduce3(factors, axes, *, n, distinct=True, block=None,
+                    interpret=None) -> float:
+    """The |cut| = 3 decomposition join Σ_{e_c pairwise distinct} Π_i
+    M_i(e_c) as a tiled tri-join kernel.
+
+    ``factors[i]`` spans only the cut axes ``axes[i]`` (a sorted subset
+    of (0, 1, 2)): (n,) vectors, (n, n) pair tensors, or full (n, n, n)
+    tensors.  Axis-subset factors broadcast per tile inside the kernel
+    — they are never expanded to 3-D — and the pairwise-distinct mask
+    is derived from tile iotas, so nothing O(n³) is materialised beyond
+    whatever genuinely 3-D factors the caller already holds.  ``block``
+    bounds the per-partial chunk (bk); take it from
+    ``cutjoin_exact_block`` so integer counts stay exact.
+    """
+    interpret = _auto_interpret(interpret)
+    if block is None:
+        block = 1024 if interpret else 128
+    b = min(block, 128) if not interpret else block
+    return _mr.tri_reduce(factors, axes, n=n, distinct=distinct,
+                          bm=b, bn=b, bk=b, interpret=interpret)
+
+
+def cutjoin_reduce3_keep(factors, axes, *, keep, n, distinct=True,
+                         block=None, interpret=None) -> np.ndarray:
+    """Keep-axis |cut| = 3 join: out[w] = Σ over the two non-kept cut
+    axes (pairwise-distinct triples only) of Π_i M_i — the anchored
+    partial-embedding vector of a 3-cut plan.  Same axis-subset
+    broadcasting, in-kernel mask, and chunked f32/f64 exactness story
+    as ``cutjoin_reduce3``."""
+    interpret = _auto_interpret(interpret)
+    if block is None:
+        block = 1024 if interpret else 128
+    b = min(block, 128) if not interpret else block
+    return _mr.tri_reduce_keep(factors, axes, keep=keep, n=n,
+                               distinct=distinct, bm=b, bn=b, bk=b,
+                               interpret=interpret)
+
+
+def cutjoin_exact_block(factors, *, interpret=None, maxes=None):
+    """Chunk size for which ``cutjoin_reduce`` / ``cutjoin_reduce3`` is
+    exact on the given integer-valued factors, or None when no f32
+    chunking can guarantee it (callers should use an f64 path).
+    ``maxes`` passes cached per-factor max magnitudes so serving plans
+    skip the device→host factor scan (see ``matreduce.exact_block``).
     """
     cap = 1024 if _auto_interpret(interpret) else 128
-    return _mr.exact_block(factors, max_block=cap)
+    return _mr.exact_block(factors, max_block=cap, maxes=maxes)
 
 
 def common_neighbors(adj_bool: np.ndarray, edges: np.ndarray, *,

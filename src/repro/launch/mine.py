@@ -21,7 +21,6 @@ from __future__ import annotations
 import argparse
 import time
 
-import numpy as np
 
 from repro.core.counting import CountingEngine, solve_overlay
 from repro.core.engine import MiningEngine
@@ -69,6 +68,10 @@ def main(argv=None):
                     help="partial-embedding API: per-vertex counts "
                     "(chain), pseudo-clique hotspots (pc), early-exit "
                     "existence")
+    ap.add_argument("--top-k", type=int, default=10, metavar="K",
+                    help="hottest vertices to report for --local-counts "
+                    "(the streaming top-k reader; the full per-vertex "
+                    "vector is never returned)")
     args = ap.parse_args(argv)
 
     if args.app == "fsm" and args.labels == 0:
@@ -104,32 +107,30 @@ def main(argv=None):
                   f"{v:,.0f}")
     elif args.app == "chain":
         p = chain(args.k)
-        vc = None
+        hot = None
         if args.no_compiler:
             eng = MiningEngine(g)
             c = eng.get_pattern_count(p, use_compiler=False)
             if args.local_counts:
                 from repro.api import vertex_counts
-                vc = vertex_counts(p, g, counter=eng.counter,
-                                   use_compiler=False)
+                hot = vertex_counts(p, g, counter=eng.counter,
+                                    use_compiler=False, top_k=args.top_k)
         else:
             from repro import compiler
             cp = compiler.compile(p, g, cache=plan_cache,
                                   local=args.local_counts)
             c = cp.count(p)
             if args.local_counts:
-                # orbit vectors straight off the plan just compiled —
-                # its node-value memo already holds the contractions
-                vc = np.zeros(g.n)
-                for orbit in p.vertex_orbits():
-                    vc += len(orbit) * cp.local_counts(p, orbit[0])
-                vc /= p.aut_order()
+                # the top-k reader straight off the plan just compiled
+                # — its node-value memo already holds the anchored
+                # orbit vectors, so no recompile and no relowering
+                from repro.api import plan_vertex_counts, top_vertices
+                hot = top_vertices(plan_vertex_counts(cp, p), args.top_k)
         print(f"  {args.k}-chain (edge-induced): {c:,.0f}")
-        if vc is not None:
-            top = sorted(range(g.n), key=lambda u: -vc[u])[:10]
+        if hot is not None:
             print("  hottest vertices (embeddings containing u):")
-            for u in top:
-                print(f"    v{u}: {vc[u]:,.0f}")
+            for v, u in hot:
+                print(f"    v{u}: {v:,.0f}")
     elif args.app == "pc":
         if args.local_counts:
             from repro.core.search import mine_pseudo_cliques
@@ -138,7 +139,7 @@ def main(argv=None):
             print(f"  {args.k}-pseudo-clique (missing=1) embeddings: "
                   f"{tot:,.0f} across {len(r.totals)} patterns")
             print("  hotspots (participation):")
-            for u in r.hotspots[:10]:
+            for u in r.hotspots[:args.top_k]:
                 print(f"    v{u}: {r.per_vertex[u]:,.0f}")
         else:
             from repro.core.cliques import pseudo_clique_count

@@ -139,15 +139,21 @@ class PatternRequest:
     partial-embedding local counts (the anchored (N,) completion-count
     vector when ``anchor`` names a pattern vertex, else the full local
     tensor over the plan's cutting set; patterns without a cutting set
-    fill ``local_counts[p] = None`` for unanchored queries)."""
+    fill ``local_counts[p] = None`` for unanchored queries).  With
+    ``top_k=K`` the request instead fills ``hotspots[p]`` with the K
+    hottest vertices by per-vertex embedding participation as (value,
+    vertex) pairs — served off the same partial-embedding plan, without
+    ever handing the host a full (N,) vector."""
     uid: int
     patterns: tuple
     support: bool = False               # MINI support instead of counts
     local: bool = False                 # partial-embedding tensors
     anchor: int | None = None           # pattern vertex pin (local=True)
+    top_k: int | None = None            # hottest-vertex reader
     counts: dict = field(default_factory=dict)
     supports: dict = field(default_factory=dict)
     local_counts: dict = field(default_factory=dict)
+    hotspots: dict = field(default_factory=dict)
     from_cache: bool = False
     done: bool = False
     error: bool = False                 # served neither compiled nor direct
@@ -164,7 +170,10 @@ class PatternQueryBatcher:
     off the plan's MINI-domain nodes, and ``local=True`` requests off
     its partial-embedding ``LocalCount`` outputs (anchored vectors pin
     ``req.anchor``; different anchors share one plan — every orbit's
-    vector is compiled).  A shared ``CountingEngine`` keeps the hom
+    vector is compiled).  ``top_k=K`` requests return only the K
+    hottest vertices by embedding participation as (value, vertex)
+    pairs, reduced off the same anchored orbit vectors — serving hosts
+    never receive a full (N,) vector.  A shared ``CountingEngine`` keeps the hom
     memo warm across plans, so even distinct pattern sets reuse
     overlapping quotient contractions.
     """
@@ -223,6 +232,13 @@ class PatternQueryBatcher:
         except ValueError:
             return None
 
+    def _hotspots(self, p, cp, k: int) -> list:
+        """Top-k (value, vertex) pairs of per-vertex embedding
+        participation, read off the compiled plan's anchored orbit
+        vectors through the shared reduction."""
+        from repro.api import plan_vertex_counts, top_vertices
+        return top_vertices(plan_vertex_counts(cp, p), k)
+
     def _serve(self, req: PatternRequest, cp):
         """Fill one request: compiled plan first, legacy direct second;
         a request is always finished, never silently dropped."""
@@ -232,6 +248,9 @@ class PatternQueryBatcher:
                 raise RuntimeError("no compiled plan")
             if req.support:
                 req.supports = {p: cp.mini_support(p)
+                                for p in req.patterns}
+            elif req.top_k is not None:
+                req.hotspots = {p: self._hotspots(p, cp, req.top_k)
                                 for p in req.patterns}
             elif req.local:
                 req.local_counts = {
@@ -246,6 +265,14 @@ class PatternQueryBatcher:
                 if req.support:
                     req.supports = {p: mini_support(self.counter, p)
                                     for p in req.patterns}
+                elif req.top_k is not None:
+                    from repro.api import vertex_counts
+                    req.hotspots = {
+                        p: vertex_counts(p, self.graph,
+                                         counter=self.counter,
+                                         use_compiler=False,
+                                         top_k=req.top_k)
+                        for p in req.patterns}
                 elif req.local:
                     req.local_counts = {
                         p: self._local_direct(p, req.anchor)
@@ -269,9 +296,11 @@ class PatternQueryBatcher:
                  for _ in range(min(self.max_batch, len(self.queue)))]
         groups: dict = {}
         for req in batch:
+            # hottest-vertex requests ride the partial-embedding plan
+            # (anchored orbit vectors), so they group with local=True
             groups.setdefault(
                 (patterns_signature(req.patterns), req.support,
-                 req.local), []).append(req)
+                 req.local or req.top_k is not None), []).append(req)
         for (sig, support, local), reqs in groups.items():
             cp = self._plan_for(sig, reqs[0].patterns, support, local)
             for req in reqs:
