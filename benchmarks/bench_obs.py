@@ -1,0 +1,153 @@
+"""Observability layer: tracing overhead and cost-model drift accounting.
+
+Two regimes:
+
+* overhead — the same compiled count evaluated with the tracer detached
+  (the default: one is-None check per node eval) vs attached (span
+  machinery + ``block_until_ready`` fencing).  The detached row is the
+  acceptance gate: tracing off must cost nothing measurable over the
+  PR-5 baseline, and the attached row prices what ``--trace`` buys.
+* drift — traced executions over a pattern sweep chosen to cover every
+  node class the compiler emits (Contract, Intersect, MobiusCombine,
+  CutJoin at |cut| in {2, 3}, LocalCount, ShrinkageCorrect): the 4-cycle
+  (2-cut join), 5-clique minus an edge (the tri-join tier), a chain
+  (Möbius route), and partial-embedding plans.  Each trace must explain
+  >= 95% of its end-to-end wall time through per-node spans (the
+  coverage acceptance bar); the (predicted, measured) pairs aggregate
+  into the calibration report embedded in ``BENCH_obs.json`` under
+  ``drift``/``drift_pairs``, which ``render_trend`` folds into the
+  cross-commit table and ``python -m repro.obs.drift`` renders.
+
+One representative span tree is also written to
+``benchmarks/results/trace_sample.json`` so every CI artifact carries a
+loadable trace.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_obs [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from benchmarks.common import emit, save_json, timeit
+from repro import compiler, obs
+from repro.core.counting import CountingEngine
+from repro.core.pattern import Pattern, chain, cycle
+from repro.graph import generators as gen
+
+K5_MINUS_EDGE = Pattern(5, [(u, v) for u in range(5)
+                            for v in range(u + 1, 5) if (u, v) != (3, 4)])
+
+MIN_COVERAGE = 0.95
+
+
+def _fresh_eval(cp, p):
+    """One full re-evaluation of the plan (memo dropped): the unit whose
+    traced-vs-untraced delta is the tracing overhead."""
+    cp._values.clear()
+    return cp.count(p)
+
+
+def bench_overhead(n: int, repeat: int = 5):
+    g = gen.erdos_renyi(n, 8.0, seed=11)
+    p = cycle(4)
+    cp = compiler.compile(p, g, counter=CountingEngine(g), cache=False)
+    cp.count(p)                             # warm: jit + factor tensors
+
+    dt_off, got_off = timeit(lambda: _fresh_eval(cp, p), repeat=repeat,
+                             warmup=True)
+    emit(f"obs/untraced/n={n}", dt_off * 1e6)
+
+    cp.tracer = obs.Tracer()
+    dt_on, got_on = timeit(lambda: _fresh_eval(cp, p), repeat=repeat,
+                           warmup=True)
+    cov = cp.tracer.coverage()
+    emit(f"obs/traced/n={n}", dt_on * 1e6,
+         f"overhead={dt_on / max(dt_off, 1e-12):.2f}x,"
+         f"coverage={cov:.3f}" if cov is not None else "")
+    cp.tracer = None
+    assert got_on == got_off, (got_on, got_off)
+    return dt_off, dt_on
+
+
+def _traced_counts(patterns, g, *, local=False, label=""):
+    """Compile + execute one pattern set under a fresh tracer; returns
+    (tracer, compiled plan).  Every trace must clear the coverage bar —
+    per-node spans explaining >= 95% of the measured end-to-end read."""
+    tr = obs.Tracer(meta={"run": label})
+    cp = compiler.compile(patterns, g, counter=CountingEngine(g),
+                          cache=False, local=local)
+    cp.tracer = tr
+    for p in patterns:
+        cp.count(p)
+        if local:
+            for orbit in p.vertex_orbits():
+                if cp.has_local(p, orbit[0]):
+                    cp.local_counts(p, orbit[0])
+            cp.exists(p)
+    cov = tr.coverage()
+    assert cov is not None and cov >= MIN_COVERAGE, \
+        f"{label}: trace coverage {cov} below {MIN_COVERAGE}"
+    return tr, cp
+
+
+def bench_drift(n: int):
+    """The drift sweep: traces covering every node class × cut size the
+    smoke suite exercises, aggregated into the calibration report."""
+    g = gen.erdos_renyi(n, 8.0, seed=7)
+    runs = [
+        (( cycle(4),), dict(local=False), "cycle4-2cut"),
+        ((K5_MINUS_EDGE,), dict(local=False), "k5me-3cut"),
+        ((chain(5),), dict(local=False), "chain5-mobius"),
+        (( cycle(4), chain(4)), dict(local=True), "local-anchored"),
+    ]
+    pairs, sample = [], None
+    for pats, kw, label in runs:
+        dt, (tr, cp) = timeit(lambda: _traced_counts(pats, g, label=label,
+                                                     **kw), repeat=1)
+        emit(f"obs/drift-run/{label}/n={n}", dt * 1e6,
+             f"coverage={tr.coverage():.3f}")
+        pairs.extend(obs.drift.pairs_from_trace(tr.to_dict()))
+        if label == "k5me-3cut":
+            sample = tr                     # the 3-cut tri-join trace
+    report = obs.drift.aggregate(pairs)
+    covered = sorted(report["groups"])
+    print(f"drift: {report['n_pairs']} pairs, "
+          f"{len(covered)} groups: {covered}", flush=True)
+    # every node class the sweep's plans executed must appear in the
+    # report — a class whose spans carry no prediction would silently
+    # drop out of calibration
+    for cls in ("Contract", "CutJoin", "MobiusCombine", "ShrinkageCorrect",
+                "LocalCount", "Intersect"):
+        assert any(k.startswith(cls) for k in covered), \
+            f"drift report missing node class {cls}: {covered}"
+    assert any("cut=2" in k for k in covered) \
+        and any("cut=3" in k for k in covered), covered
+    return report, pairs, sample
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration")
+    args = ap.parse_args(argv)
+
+    n = 128 if args.smoke else 400
+    bench_overhead(n if args.smoke else 256)
+    report, pairs, sample = bench_drift(n)
+
+    results = pathlib.Path(__file__).parent / "results"
+    results.mkdir(exist_ok=True)
+    if sample is not None:
+        sample.save(str(results / "trace_sample.json"))
+        print(f"wrote trace sample to {results / 'trace_sample.json'}",
+              flush=True)
+    save_json("obs", extra={"drift": obs.drift.bench_summary(report),
+                            "drift_pairs": pairs,
+                            "metrics": obs.snapshot()})
+    print(obs.drift.render(report), end="", flush=True)
+
+
+if __name__ == "__main__":
+    main()

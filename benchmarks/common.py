@@ -17,10 +17,14 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     print(line, flush=True)
 
 
-def save_json(suite: str, start_index: int = 0) -> pathlib.Path:
+def save_json(suite: str, start_index: int = 0,
+              extra: dict = None) -> pathlib.Path:
     """Write rows emitted since ``start_index`` to
     ``benchmarks/results/BENCH_<suite>.json`` (the machine-readable perf
-    trajectory the CI workflow uploads as a build artifact)."""
+    trajectory the CI workflow uploads as a build artifact).  ``extra``
+    merges additional top-level keys into the JSON (e.g. bench_obs's
+    ``drift``/``drift_pairs`` tables) without disturbing the row schema
+    ``render_trend`` reads."""
     rows = []
     for line in RESULTS[start_index:]:
         name, us, derived = line.split(",", 2)
@@ -28,8 +32,9 @@ def save_json(suite: str, start_index: int = 0) -> pathlib.Path:
                      "derived": derived})
     out = pathlib.Path(__file__).parent / "results" / f"BENCH_{suite}.json"
     out.parent.mkdir(exist_ok=True)
-    out.write_text(json.dumps({"suite": suite, "rows": rows}, indent=1)
-                   + "\n")
+    doc = {"suite": suite, "rows": rows}
+    doc.update(extra or {})
+    out.write_text(json.dumps(doc, indent=1) + "\n")
     print(f"wrote {len(rows)} rows to {out}", flush=True)
     return out
 

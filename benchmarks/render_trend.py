@@ -39,6 +39,16 @@ def load_snapshots(root: pathlib.Path):
             suite = d.get("suite", f.stem.replace("BENCH_", ""))
         except (json.JSONDecodeError, KeyError, TypeError, ValueError):
             continue                        # torn/foreign file: skip
+        # cost-model calibration rides the same table: bench_obs embeds
+        # a per-group drift summary, whose ratio spread (max/min of
+        # measured/predicted — 1.0 is a perfectly scalable model) trends
+        # across commits exactly like a latency row
+        for key, g in (d.get("drift") or {}).items():
+            if isinstance(g, dict) and g.get("ratio_spread") is not None:
+                # group keys use "|" separators — swap for "/" so the
+                # name survives a markdown table cell
+                rows["drift-spread " + key.replace("|", "/")] = \
+                    float(g["ratio_spread"])
         label = f.parent.name if f.parent != root else "results"
         suites.setdefault(suite, []).append((label, rows))
     return suites

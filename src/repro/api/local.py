@@ -45,6 +45,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core.counting import CountingEngine
 from repro.core.pattern import Pattern
 from repro.graph.storage import Graph
@@ -152,8 +153,8 @@ def local_counts(pattern: Pattern, graph: Graph, *,
                     f"unanchored local tensor (anchored queries work)")
         except ValueError:
             raise
-        except Exception:
-            pass                        # direct assembly takes over
+        except Exception:               # direct assembly takes over
+            obs.counter("api.compile_fallbacks", entry="local_counts")
     from repro.compiler import lowering
     built = _direct_plan(pattern, graph, anchor, budget)
     if built is None:
@@ -183,7 +184,7 @@ def exists(pattern: Pattern, graph: Graph, *,
                                 cache=cache, apct=apct, budget=budget)
             return cp.exists(pattern)
         except Exception:
-            pass
+            obs.counter("api.compile_fallbacks", entry="exists")
     try:
         lc = local_counts(pattern, graph, counter=counter,
                           use_compiler=False, budget=budget)
@@ -250,8 +251,9 @@ def vertex_counts(pattern: Pattern, graph: Graph, *,
                                 cache=cache, apct=apct, budget=budget)
             total = plan_vertex_counts(cp, pattern)
             return total if top_k is None else top_vertices(total, top_k)
-        except Exception:
-            total[:] = 0.0              # per-orbit direct path takes over
+        except Exception:               # per-orbit direct path takes over
+            total[:] = 0.0
+            obs.counter("api.compile_fallbacks", entry="vertex_counts")
     for orbit in pattern.vertex_orbits():
         lc = local_counts(pattern, graph, anchor=orbit[0],
                           counter=counter, cache=cache, apct=apct,

@@ -70,7 +70,7 @@ def _label_fracs(patterns, graph):
 
 
 def _add_local_outputs(plan, patterns, graph, apct, budget, counter,
-                       label_fracs, max_cutjoin_cut):
+                       label_fracs, max_cutjoin_cut, node_costs=None):
     """Partial-embedding outputs for every pattern: the unanchored local
     tensor (cheapest eligible cutting set, absent for cliques) plus one
     anchored vector per automorphism orbit (decomposed when a cut
@@ -108,6 +108,11 @@ def _add_local_outputs(plan, patterns, graph, apct, budget, counter,
                            label_fracs)
             for node in best.nodes:
                 plan.add(node)
+            if node_costs is not None:
+                # setdefault: the seeded 0.0 of already-committed count
+                # nodes must not overwrite their real selection cost
+                for node in best.nodes:
+                    node_costs.setdefault(node.key, shared[node.key])
         return best
 
     for p in patterns:
@@ -225,9 +230,10 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
         p, graph_n=graph.n, budget=budget,
         max_cutjoin_cut=max_cutjoin_cut)) for p in patterns]
     label_fracs = _label_fracs(patterns, graph)
+    node_costs: dict = {}
     selections, total_cost = costing.select_candidates(
         per_pattern, apct, graph.n, budget, counter=counter,
-        label_fracs=label_fracs)
+        label_fracs=label_fracs, node_costs=node_costs)
     plan = frontend.assemble(selections)
     if domains:
         for p in patterns:
@@ -235,7 +241,9 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
                 plan.add(node)
     if local:
         _add_local_outputs(plan, patterns, graph, apct, budget, counter,
-                           label_fracs, max_cutjoin_cut)
+                           label_fracs, max_cutjoin_cut,
+                           node_costs=node_costs)
+    import math as _math
     plan.meta.update({
         "key": key,
         "budget": budget,
@@ -243,6 +251,12 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
         "domains": domains,
         "local": local,
         "estimated_cost": total_cost,
+        # per-node APCT predictions for committed nodes — the predicted
+        # side of obs.drift's calibration report (traced executions pair
+        # these with measured self times); uncommitted fallback nodes
+        # and inf-priced entries carry no prediction
+        "node_costs": {k: v for k, v in node_costs.items()
+                       if k in plan.nodes and _math.isfinite(v)},
         "styles": {pattern_key(p): cand.style for p, cand in selections},
         "cuts": {pattern_key(p): sorted(cand.cut) if cand.cut else None
                  for p, cand in selections},

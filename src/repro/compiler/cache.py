@@ -14,8 +14,10 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import time
 from typing import Iterable, Optional
 
+from repro import obs
 from repro.core.pattern import Pattern
 from repro.graph.storage import Graph
 from repro.compiler.ir import Plan, pattern_key
@@ -60,11 +62,39 @@ class PlanCache:
         self.path = path
         self.max_disk_entries = max_disk_entries
         self._mem: dict = {}
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        # instance-exact counters that mirror into the process metrics
+        # registry (``plancache.hits`` / ``.misses`` / ``.evictions``);
+        # the ``hits``/``misses``/``evictions`` attributes stay the
+        # public surface via properties below
+        self.stats = obs.StatsView(
+            "plancache", keys=("hits", "misses", "evictions"),
+            tier="disk" if path else "mem")
         if path:
             os.makedirs(path, exist_ok=True)
+
+    @property
+    def hits(self) -> int:
+        return self.stats["hits"]
+
+    @hits.setter
+    def hits(self, v: int):
+        self.stats["hits"] = v
+
+    @property
+    def misses(self) -> int:
+        return self.stats["misses"]
+
+    @misses.setter
+    def misses(self, v: int):
+        self.stats["misses"] = v
+
+    @property
+    def evictions(self) -> int:
+        return self.stats["evictions"]
+
+    @evictions.setter
+    def evictions(self, v: int):
+        self.stats["evictions"] = v
 
     def _file(self, key: str) -> str:
         return os.path.join(self.path, f"plan-{key}.json")
@@ -92,7 +122,10 @@ class PlanCache:
     def _evict(self):
         """Unlink the stalest on-disk entries beyond the cap (LRU by
         mtime).  Racing processes may unlink the same file — missing
-        files are skipped, not errors."""
+        files are skipped, not errors.  Every eviction emits the evicted
+        entry's age and size to the metrics registry (histograms
+        ``plancache.eviction.age_s`` / ``.bytes``), so LRU pressure on a
+        serving host is visible instead of silent."""
         if not self.path or self.max_disk_entries is None:
             return
         try:
@@ -109,10 +142,19 @@ class PlanCache:
                 return os.path.getmtime(f)
             except OSError:
                 return 0.0
+        now = time.time()                  # wall clock: mtimes are wall
         for f in sorted(files, key=_mtime)[:excess]:
+            try:
+                st = os.stat(f)
+                age_s, size = max(0.0, now - st.st_mtime), st.st_size
+            except OSError:
+                age_s = size = None
             try:
                 os.unlink(f)
                 self.evictions += 1
+                if age_s is not None:
+                    obs.observe("plancache.eviction.age_s", age_s)
+                    obs.observe("plancache.eviction.bytes", size)
             except OSError:
                 pass
 

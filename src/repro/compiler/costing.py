@@ -225,14 +225,18 @@ def commit(cand: Candidate, apct, n_vertices: int,
 def select_candidates(per_pattern: List[Tuple[Pattern, List[Candidate]]],
                       apct, n_vertices: int,
                       budget: int = 1 << 27, counter=None,
-                      label_fracs=None):
+                      label_fracs=None, node_costs: Dict[str, float] = None):
     """Greedy joint selection over the application: for each pattern pick
     the cheapest candidate under the current shared pool, then commit its
     nodes.  Returns ([(pattern, winner)], total_cost).
 
     ``counter`` extends the pool with contractions the engine has already
     materialised (see ``_materialised``); ``label_fracs`` prices label
-    masks (see ``_label_selectivity``)."""
+    masks (see ``_label_selectivity``).  ``node_costs`` (optional dict)
+    receives the per-node APCT cost of every committed node — the
+    *predicted* side of the observability layer's drift report, stored
+    on the plan so traced executions can pair each node's prediction
+    with its measured time."""
     shared: Dict[str, float] = {}
     out = []
     total = 0.0
@@ -254,6 +258,8 @@ def select_candidates(per_pattern: List[Tuple[Pattern, List[Candidate]]],
         commit(best, apct, n_vertices, shared, budget, counter, label_fracs)
         out.append((p, best))
         total += bc
+    if node_costs is not None:
+        node_costs.update(shared)
     return out, total
 
 

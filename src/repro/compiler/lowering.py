@@ -34,12 +34,14 @@ repeated queries against a compiled application never re-contract."""
 from __future__ import annotations
 
 import functools
+from contextlib import nullcontext
 from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.counting import CountingEngine
 from repro.core.pattern import Pattern, clique
 from repro.graph.storage import Graph
@@ -91,21 +93,46 @@ class CompiledPlan:
         self._masks: Dict[int, np.ndarray] = {}
         self._factors: Dict[tuple, np.ndarray] = {}
         self._factor_maxes: Dict[tuple, float] = {}
-        self.stats = {"node_evals": 0, "node_hits": 0,
-                      "exists_early_exits": 0}
+        # attach an ``obs.Tracer`` here to record per-node span trees on
+        # every public read; None (the default) costs one is-None check
+        # per node eval — nothing else
+        self.tracer = None
+        self.stats = obs.StatsView(
+            "plan", keys=("node_evals", "node_hits", "exists_early_exits"))
+
+    # -- tracing hooks -----------------------------------------------------------
+    def _root(self, op: str, key: str):
+        """Root "execute" span for one public read (no-op untraced).
+        Node spans opened by the ``value`` recursion nest beneath it, so
+        a trace's root coverage measures how much of the end-to-end read
+        the per-node accounting explains."""
+        tr = self.tracer
+        if tr is None:
+            return nullcontext()
+        return tr.span(f"{op}:{key}", kind="execute", op=op)
+
+    def _annotate(self, **attrs):
+        """Attach attributes to the innermost open span (no-op untraced
+        or outside any span — eval helpers are also called directly)."""
+        tr = self.tracer
+        if tr is not None:
+            tr.annotate(**attrs)
 
     # -- public API --------------------------------------------------------------
     def count(self, p: Pattern) -> float:
         """Edge-induced embedding count of one compiled pattern."""
-        return float(self.value(self.plan.output_for(p)))
+        key = self.plan.output_for(p)
+        with self._root("count", key):
+            return float(self.value(key))
 
     def counts(self) -> dict:
         """All compiled count outputs: canonical pattern key -> count
         (partial-embedding outputs are tensors — read them through
         ``local_counts``)."""
-        return {pk: float(self.value(nk))
-                for pk, nk in self.plan.outputs.items()
-                if not is_local_output(pk)}
+        with self._root("counts", "*"):
+            return {pk: float(self.value(nk))
+                    for pk, nk in self.plan.outputs.items()
+                    if not is_local_output(pk)}
 
     def has_local(self, p: Pattern, anchor: Optional[int] = None) -> bool:
         """True when the plan carries the requested partial-embedding
@@ -139,7 +166,8 @@ class CompiledPlan:
         # a copy, not the memo: plans are memoised across serving steps,
         # so handing out the node-value array itself would let one
         # caller's in-place edit corrupt every later answer
-        return np.array(self.value(nk), np.float64)
+        with self._root("local_counts", nk):
+            return np.array(self.value(nk), np.float64)
 
     def exists(self, p: Pattern) -> bool:
         """Existence with early exit: on a local plan, factor tensors
@@ -150,16 +178,18 @@ class CompiledPlan:
         the scalar count — decides."""
         nk = self.plan.outputs.get(local_key(p))
         node = self.plan.nodes.get(nk) if nk is not None else None
-        if isinstance(node, LocalCount):
-            for terms, ax in zip(node.factors, node.factor_axes()):
-                if not np.any(np.abs(self._combine(terms, len(ax)))
-                              > 0.5):
-                    self.stats["exists_early_exits"] += 1
-                    return False
-            return bool(np.max(self.value(nk)) > 0.5)
-        if nk is not None:
-            return bool(np.max(np.asarray(self.value(nk))) > 0.5)
-        return self.count(p) > 0.5
+        with self._root("exists", nk or pattern_key(p)):
+            if isinstance(node, LocalCount):
+                for terms, ax in zip(node.factors, node.factor_axes()):
+                    if not np.any(np.abs(self._combine(terms, len(ax)))
+                                  > 0.5):
+                        self.stats["exists_early_exits"] += 1
+                        self._annotate(early_exit=True)
+                        return False
+                return bool(np.max(self.value(nk)) > 0.5)
+            if nk is not None:
+                return bool(np.max(np.asarray(self.value(nk))) > 0.5)
+            return self.count(p) > 0.5
 
     def executable(self, p: Pattern):
         """Zero-arg closure for one pattern (plan handle for callers that
@@ -174,11 +204,13 @@ class CompiledPlan:
         vertex.  Raises ``KeyError`` when the plan has no domain nodes
         for ``p``."""
         out = {}
-        for key in domain_keys(p):
-            if key not in self.plan.nodes:
-                raise KeyError(f"plan has no domain node {key!r} "
-                               f"(compiled without domains=True?)")
-            out[int(key.rsplit(":", 1)[1])] = np.asarray(self.value(key))
+        with self._root("domains", pattern_key(p)):
+            for key in domain_keys(p):
+                if key not in self.plan.nodes:
+                    raise KeyError(f"plan has no domain node {key!r} "
+                                   f"(compiled without domains=True?)")
+                out[int(key.rsplit(":", 1)[1])] = \
+                    np.asarray(self.value(key))
         return out
 
     def mini_support(self, p: Pattern) -> int:
@@ -194,7 +226,23 @@ class CompiledPlan:
             return self._values[key]
         node = self.plan.nodes[key]
         self.stats["node_evals"] += 1
-        val = self._eval(node)
+        tr = self.tracer
+        if tr is None:                   # the default: no span machinery
+            val = self._eval(node)
+        else:
+            # one span per node eval, nested by the recursion itself
+            # (refs evaluated inside ``_eval`` open child spans; memo
+            # hits open none — the trace tree is exactly the work done).
+            # ``predicted`` pairs the APCT cost the model charged at
+            # selection time for the drift report; the fence closes the
+            # span only after JAX async dispatch has really finished.
+            attrs = {"predicted":
+                     self.plan.meta.get("node_costs", {}).get(key)}
+            cut = getattr(node, "cut_size", None)
+            if cut is not None:
+                attrs["cut_size"] = cut
+            with tr.span(key, kind=type(node).__name__, **attrs):
+                val = obs.fence(self._eval(node))
         self._values[key] = val
         return val
 
@@ -204,17 +252,22 @@ class CompiledPlan:
                 # decode the marker-encoded pattern: strips cut-rank
                 # markers, restores real vertex labels (label-masked
                 # contraction on labelled patterns)
+                self._annotate(route="einsum-free")
                 skel = free_skeleton(node.pattern)
                 return self.counter.hom_free_tensor(skel, node.free,
                                                     order=node.order)
+            self._annotate(route="einsum")
             return self.counter.hom(node.pattern, order=node.order or None)
         if isinstance(node, Intersect):
             if self.use_pallas and node.k == 3:
                 from repro.kernels import ops
+                self._annotate(route="pallas-triangle")
                 adj = self.graph.dense_adjacency(np.float32, pad=False)
                 return 6.0 * float(ops.triangle_count(adj))
+            self._annotate(route="enumeration")
             return self.counter.hom(clique(node.k))
         if isinstance(node, MobiusCombine):
+            self._annotate(route="host")
             acc = 0.0
             for coeff, ref in node.terms:
                 acc += coeff * self.value(ref)
@@ -224,6 +277,7 @@ class CompiledPlan:
         if isinstance(node, LocalCount):
             return self._eval_local(node)
         if isinstance(node, ShrinkageCorrect):
+            self._annotate(route="host")
             acc = self.value(node.base)
             for mult, ref in node.corrections:
                 acc -= mult * self.value(ref)
@@ -302,10 +356,13 @@ class CompiledPlan:
 
     def _eval_cutjoin(self, node: CutJoin) -> float:
         Ms, axes, maxes = self._join_factors(node)
+        self._annotate(factor_shapes=[list(np.shape(M)) for M in Ms])
         if self.cutjoin_kernel and node.cut_size <= 3:
             from repro.kernels import ops
             block = ops.cutjoin_exact_block(Ms, maxes=maxes)
+            self._annotate(exact_block=block)
             if block is not None:            # f32 chunks provably exact
+                self._annotate(route="kernel")
                 if node.cut_size <= 2:
                     return ops.cutjoin_reduce(Ms,
                                               distinct=node.cut_size >= 2,
@@ -314,6 +371,8 @@ class CompiledPlan:
                                            block=block)
             # factor magnitudes exceed what chunked f32 can represent
             # exactly: fall through to the f64 XLA join
+            obs.counter("cutjoin.kernel_fallbacks", cut=node.cut_size)
+        self._annotate(route="xla-dense")
         Ms = self._dense_expand(Ms, axes, node.cut_size)
         if node.cut_size >= 2:               # injectivity of the cut tuple
             Ms.append(self._mask(node.cut_size))
@@ -333,7 +392,9 @@ class CompiledPlan:
         (also the kernel's bit-for-bit oracle); corrections are already
         vector-sized and subtract after the reduce."""
         Ms, axes, maxes = self._join_factors(node)
+        self._annotate(factor_shapes=[list(np.shape(M)) for M in Ms])
         if node.cut_size == 1 or len(node.keep) == node.cut_size:
+            self._annotate(route="dense-product")
             dense = self._dense_expand(Ms, axes, node.cut_size)
             out = np.array(dense[0], np.float64)
             for M in dense[1:]:
@@ -348,7 +409,9 @@ class CompiledPlan:
         if self.cutjoin_kernel:
             from repro.kernels import ops
             block = ops.cutjoin_exact_block(Ms, maxes=maxes)
+            self._annotate(exact_block=block)
             if block is not None:            # f32 chunks provably exact
+                self._annotate(route="kernel-keep")
                 if node.cut_size == 2:
                     out = ops.cutjoin_reduce_keep(Ms, keep=axis,
                                                   bm=block, bn=block)
@@ -356,7 +419,11 @@ class CompiledPlan:
                     out = ops.cutjoin_reduce3_keep(Ms, axes, keep=axis,
                                                    n=self.graph.n,
                                                    block=block)
+            else:
+                obs.counter("cutjoin.kernel_fallbacks", cut=node.cut_size,
+                            keep=True)
         if out is None:
+            self._annotate(route="xla-keep")
             dense = self._dense_expand(Ms, axes, node.cut_size)
             with self.counter._x64():
                 stack = jnp.stack([jnp.asarray(M) for M in dense])

@@ -46,7 +46,7 @@ def _cost(patterns, cuts, apct, n) -> float:
 
 def separate_tuning(patterns, apct, n) -> SearchResult:
     """Tune each pattern independently (no reuse awareness)."""
-    t0 = time.time()
+    t0 = time.perf_counter()
     cuts, evals = [], 0
     for p in patterns:
         best, bc = None, math.inf
@@ -57,12 +57,12 @@ def separate_tuning(patterns, apct, n) -> SearchResult:
                 best, bc = cand, c
         cuts.append(best)
     return SearchResult(cuts, _cost(patterns, cuts, apct, n),
-                        time.time() - t0, evals)
+                        time.perf_counter() - t0, evals)
 
 
 def independent_sampling(patterns, apct, n, num_samples: int = 64,
                          seed: int = 0) -> SearchResult:
-    t0 = time.time()
+    t0 = time.perf_counter()
     rng = random.Random(seed)
     cands = [candidates(p) for p in patterns]
     best, bc = None, math.inf
@@ -72,21 +72,21 @@ def independent_sampling(patterns, apct, n, num_samples: int = 64,
         c = _cost(patterns, cuts, apct, n)
         if c < bc:
             best, bc = cuts, c
-        hist.append((time.time() - t0, bc))
-    return SearchResult(best, bc, time.time() - t0, num_samples, hist)
+        hist.append((time.perf_counter() - t0, bc))
+    return SearchResult(best, bc, time.perf_counter() - t0, num_samples, hist)
 
 
 def circulant_tuning(patterns, apct, n, init=None,
                      max_rounds: int = 20) -> SearchResult:
     """Algorithm of Fig 23: round-robin coordinate descent over the joint
     cutting-set assignment until convergence."""
-    t0 = time.time()
+    t0 = time.perf_counter()
     cands = [candidates(p) for p in patterns]
     cuts = (list(init) if init is not None
             else separate_tuning(patterns, apct, n).cuts)
     best = _cost(patterns, cuts, apct, n)
     evals = 0
-    hist = [(time.time() - t0, best)]
+    hist = [(time.perf_counter() - t0, best)]
     for _ in range(max_rounds):
         converged = True
         for i, p in enumerate(patterns):
@@ -100,25 +100,25 @@ def circulant_tuning(patterns, apct, n, init=None,
                 evals += 1
                 if c < best:
                     best = c
-                    hist.append((time.time() - t0, best))
+                    hist.append((time.perf_counter() - t0, best))
                 else:
                     cuts[i] = backup
             if cuts[i] != previous:
                 converged = False
         if converged:
             break
-    return SearchResult(cuts, best, time.time() - t0, evals, hist)
+    return SearchResult(cuts, best, time.perf_counter() - t0, evals, hist)
 
 
 def simulated_annealing(patterns, apct, n, steps: int = 300,
                         t_start: float = 2.0, seed: int = 0) -> SearchResult:
-    t0 = time.time()
+    t0 = time.perf_counter()
     rng = random.Random(seed)
     cands = [candidates(p) for p in patterns]
     cuts = [rng.choice(cs) for cs in cands]
     cur = _cost(patterns, cuts, apct, n)
     best, bcuts = cur, list(cuts)
-    hist = [(time.time() - t0, best)]
+    hist = [(time.perf_counter() - t0, best)]
     for s in range(steps):
         temp = t_start * (1 - s / steps) + 1e-3
         i = rng.randrange(len(patterns))
@@ -130,17 +130,17 @@ def simulated_annealing(patterns, apct, n, steps: int = 300,
             cur = c
             if c < best:
                 best, bcuts = c, list(cuts)
-                hist.append((time.time() - t0, best))
+                hist.append((time.perf_counter() - t0, best))
         else:
             cuts[i] = old
-    return SearchResult(bcuts, best, time.time() - t0, steps, hist)
+    return SearchResult(bcuts, best, time.perf_counter() - t0, steps, hist)
 
 
 def genetic(patterns, apct, n, pop: int = 16, gens: int = 12,
             seed: int = 0) -> SearchResult:
     """Genetic baseline (paper §4.3): uniform crossover + point mutation
     over the joint cutting-set assignment."""
-    t0 = time.time()
+    t0 = time.perf_counter()
     rng = random.Random(seed)
     cands = [candidates(p) for p in patterns]
 
@@ -150,7 +150,7 @@ def genetic(patterns, apct, n, pop: int = 16, gens: int = 12,
     popl = [rand_ind() for _ in range(pop)]
     scored = [( _cost(patterns, ind, apct, n), ind) for ind in popl]
     evals = pop
-    hist = [(time.time() - t0, min(s for s, _ in scored))]
+    hist = [(time.perf_counter() - t0, min(s for s, _ in scored))]
     for g in range(gens):
         scored.sort(key=lambda t: t[0])
         elite = [ind for _, ind in scored[:pop // 4]]
@@ -165,9 +165,9 @@ def genetic(patterns, apct, n, pop: int = 16, gens: int = 12,
             children.append(child)
         scored = [(_cost(patterns, ind, apct, n), ind) for ind in children]
         evals += len(children)
-        hist.append((time.time() - t0, min(s for s, _ in scored)))
+        hist.append((time.perf_counter() - t0, min(s for s, _ in scored)))
     best, ind = min(scored, key=lambda t: t[0])
-    return SearchResult(ind, best, time.time() - t0, evals, hist)
+    return SearchResult(ind, best, time.perf_counter() - t0, evals, hist)
 
 
 METHODS = {

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.kernels import bitset as _bitset
 from repro.kernels import flashattn as _fa
 from repro.kernels import matreduce as _mr
@@ -82,6 +83,8 @@ def cutjoin_reduce(factors, *, distinct=True, bm=None, bn=None,
         bm = 1024 if interpret else 128
     if bn is None:
         bn = bm
+    obs.counter("kernel.calls", op="cutjoin_reduce",
+                cut=2 if getattr(factors[0], "ndim", 2) == 2 else 1)
     return _mr.prod_reduce(factors, distinct=distinct, bm=bm, bn=bn,
                            interpret=interpret)
 
@@ -100,6 +103,7 @@ def cutjoin_reduce_keep(factors, *, keep=0, distinct=True, bm=None,
         bm = 1024 if interpret else 128
     if bn is None:
         bn = bm
+    obs.counter("kernel.calls", op="cutjoin_reduce_keep", cut=2)
     return _mr.prod_reduce_keep(factors, keep=keep, distinct=distinct,
                                 bm=bm, bn=bn, interpret=interpret)
 
@@ -122,6 +126,7 @@ def cutjoin_reduce3(factors, axes, *, n, distinct=True, block=None,
     if block is None:
         block = 1024 if interpret else 128
     b = min(block, 128) if not interpret else block
+    obs.counter("kernel.calls", op="cutjoin_reduce3", cut=3)
     return _mr.tri_reduce(factors, axes, n=n, distinct=distinct,
                           bm=b, bn=b, bk=b, interpret=interpret)
 
@@ -137,6 +142,7 @@ def cutjoin_reduce3_keep(factors, axes, *, keep, n, distinct=True,
     if block is None:
         block = 1024 if interpret else 128
     b = min(block, 128) if not interpret else block
+    obs.counter("kernel.calls", op="cutjoin_reduce3_keep", cut=3)
     return _mr.tri_reduce_keep(factors, axes, keep=keep, n=n,
                                distinct=distinct, bm=b, bn=b, bk=b,
                                interpret=interpret)
@@ -150,7 +156,10 @@ def cutjoin_exact_block(factors, *, interpret=None, maxes=None):
     skip the device→host factor scan (see ``matreduce.exact_block``).
     """
     cap = 1024 if _auto_interpret(interpret) else 128
-    return _mr.exact_block(factors, max_block=cap, maxes=maxes)
+    block = _mr.exact_block(factors, max_block=cap, maxes=maxes)
+    obs.counter("kernel.exact_block",
+                outcome="granted" if block is not None else "refused")
+    return block
 
 
 def common_neighbors(adj_bool: np.ndarray, edges: np.ndarray, *,

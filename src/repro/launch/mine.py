@@ -72,13 +72,26 @@ def main(argv=None):
                     help="hottest vertices to report for --local-counts "
                     "(the streaming top-k reader; the full per-vertex "
                     "vector is never returned)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record per-node execution spans on compiled "
+                    "plans and write the trace to FILE (JSON; a "
+                    "*.chrome.json suffix writes chrome://tracing "
+                    "format instead)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the process metrics registry "
+                    "(counters/gauges/histograms) after the run")
     args = ap.parse_args(argv)
+
+    tracer = None
+    if args.trace:
+        from repro import obs
+        tracer = obs.Tracer()
 
     if args.app == "fsm" and args.labels == 0:
         args.labels = 6
     g = build_graph(args)
     print(f"graph: {g}")
-    t0 = time.time()
+    t0 = time.perf_counter()
 
     plan_cache = None
     if args.plan_cache:
@@ -95,7 +108,8 @@ def main(argv=None):
         else:
             from repro import compiler
             cp = compiler.compile(pats, g, cache=plan_cache)
-            t_compile = time.time() - t0
+            cp.tracer = tracer
+            t_compile = time.perf_counter() - t0
             e = {p: cp.count(p) for p in pats}
             table = solve_overlay(args.k, e)
             print(f"  compiled {len(pats)} patterns -> "
@@ -119,6 +133,7 @@ def main(argv=None):
             from repro import compiler
             cp = compiler.compile(p, g, cache=plan_cache,
                                   local=args.local_counts)
+            cp.tracer = tracer
             c = cp.count(p)
             if args.local_counts:
                 # the top-k reader straight off the plan just compiled
@@ -169,7 +184,23 @@ def main(argv=None):
                            key=lambda t: (-t[1], t[0].n))[:10]:
             print(f"    support {s}: n={p.n} edges={sorted(p.edges)} "
                   f"labels={p.labels}")
-    print(f"done in {time.time() - t0:.2f}s")
+    print(f"done in {time.perf_counter() - t0:.2f}s")
+    if tracer is not None:
+        if tracer.roots:
+            tracer.save(args.trace)
+            cov = tracer.coverage()
+            print(f"trace: {args.trace} ({len(tracer.roots)} root spans"
+                  + (f", node coverage {cov:.1%}" if cov is not None
+                     else "") + ")")
+        else:
+            print(f"trace: no compiled-plan execution to record "
+                  f"(--app {args.app}"
+                  + (" --no-compiler" if args.no_compiler else "")
+                  + " runs off the traced path)")
+    if args.metrics:
+        from repro import obs
+        print("metrics:")
+        print(obs.dump(indent=2))
 
 
 if __name__ == "__main__":

@@ -189,8 +189,17 @@ class PatternQueryBatcher:
         self.queue: collections.deque = collections.deque()
         self.finished: list = []
         self._plans: dict = {}          # pattern-set signature -> CompiledPlan
-        self.stats = {"steps": 0, "compiles": 0, "cache_hits": 0,
-                      "fallbacks": 0, "errors": 0}
+        # dict-shaped view backed by the metrics registry ("batcher.*"):
+        # fallbacks/errors carry per-phase splits — "compile" means the
+        # group never got a plan (compilation failed), "execute" means a
+        # lowered plan refused at run time (e.g. PlanTooWide) — the
+        # plain totals remain for every pre-existing consumer
+        from repro import obs
+        self.stats = obs.StatsView(
+            "batcher", keys=("steps", "compiles", "cache_hits",
+                             "fallbacks", "fallbacks_compile",
+                             "fallbacks_execute", "errors",
+                             "errors_compile", "errors_execute"))
 
     def submit(self, req: PatternRequest):
         self.queue.append(req)
@@ -241,8 +250,13 @@ class PatternQueryBatcher:
 
     def _serve(self, req: PatternRequest, cp):
         """Fill one request: compiled plan first, legacy direct second;
-        a request is always finished, never silently dropped."""
+        a request is always finished, never silently dropped.  Fallbacks
+        and errors are counted under the phase that failed: ``compile``
+        when no plan exists for the group, ``execute`` when the lowered
+        plan raised — distinguishing "the compiler can't plan this" from
+        "the plan refused this graph" (e.g. PlanTooWide)."""
         from repro.core.fsm import mini_support
+        phase = "compile" if cp is None else "execute"
         try:
             if cp is None:
                 raise RuntimeError("no compiled plan")
@@ -282,9 +296,11 @@ class PatternQueryBatcher:
                                   for p in req.patterns}
                 req.from_cache = False
                 self.stats["fallbacks"] += 1
+                self.stats[f"fallbacks_{phase}"] += 1
             except Exception:
                 req.error = True
                 self.stats["errors"] += 1
+                self.stats[f"errors_{phase}"] += 1
         req.done = True
         self.finished.append(req)
 
