@@ -18,6 +18,11 @@ Two regimes:
   ``drift``/``drift_pairs``, which ``render_trend`` folds into the
   cross-commit table and ``python -m repro.obs.drift`` renders.
 
+* precert — serving off a plan the static verifier precertified for
+  ``exact_block``: the trace must contain zero ``guard-scan`` spans
+  (the per-eval device->host factor-max reduction is gone) and the
+  count must match the guard-scan path bit-for-bit.
+
 One representative span tree is also written to
 ``benchmarks/results/trace_sample.json`` so every CI artifact carries a
 loadable trace.
@@ -127,6 +132,36 @@ def bench_drift(n: int):
     return report, pairs, sample
 
 
+def bench_precert(n: int):
+    """Precertified serving: the static verifier's degree-bound
+    certificate must make the per-eval device->host guard scan
+    disappear from the trace, with the served count bit-for-bit equal
+    to the guard-scan path (the certificate only ever *under*-promises
+    the block the runtime guard would grant)."""
+    g = gen.erdos_renyi(n, 8.0, seed=13)
+    p = cycle(4)
+    cp = compiler.compile(p, g, counter=CountingEngine(g), cache=False)
+    pre = cp.plan.meta.get("precert") or {}
+    assert pre, "2-cut join on a sparse graph must precertify"
+
+    cp.count(p)                             # warm
+    tr = obs.Tracer()
+    cp.tracer = tr
+    dt, got = timeit(lambda: _fresh_eval(cp, p), repeat=3, warmup=True)
+    scans = [s for s in tr.walk() if s.kind == "guard-scan"]
+    assert not scans, \
+        f"precertified plan still guard-scanned: {[s.name for s in scans]}"
+    joins = [s for s in tr.walk() if s.kind == "CutJoin"]
+    assert joins and all(s.attrs.get("precertified") for s in joins), joins
+    cp.tracer = None
+
+    oracle = compiler.compile(p, g, counter=CountingEngine(g), cache=False,
+                              cutjoin_kernel=False)
+    assert got == oracle.count(p), (got, oracle.count(p))
+    emit(f"obs/precert-serve/n={n}", dt * 1e6,
+         f"certified={len(pre)},guard_scans=0")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -135,6 +170,7 @@ def main(argv=None):
 
     n = 128 if args.smoke else 400
     bench_overhead(n if args.smoke else 256)
+    bench_precert(n)
     report, pairs, sample = bench_drift(n)
 
     results = pathlib.Path(__file__).parent / "results"

@@ -45,13 +45,13 @@ def main() -> None:
         if args.only and name != args.only:
             continue
         print(f"=== {name} ===", flush=True)
-        t0 = time.time()
+        t0 = time.perf_counter()
         try:
             fn(args.scale)
         except Exception:                  # noqa: BLE001
             failures.append(name)
             traceback.print_exc()
-        print(f"=== {name} done in {time.time() - t0:.1f}s ===", flush=True)
+        print(f"=== {name} done in {time.perf_counter() - t0:.1f}s ===", flush=True)
 
     out = pathlib.Path(__file__).parent / "results" / "bench.csv"
     out.parent.mkdir(exist_ok=True)

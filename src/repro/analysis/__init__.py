@@ -1,0 +1,16 @@
+"""Static analysis over the plan IR.
+
+``verify``  — structural verifier + abstract interpreter: DAG/ref/output
+              integrity, shape and tier-matrix legality, budget checks,
+              and ``exact_block`` precertification (see
+              ``analysis.verify``).
+``lint``    — AST-level repo-invariant lint with a CLI
+              (``python -m repro.analysis.lint``); imported lazily — the
+              serving path never pays for it.
+"""
+from repro.analysis.verify import (Diagnostic, GraphInfo, PlanVerifyError,
+                                   VerifyResult, infer_shapes, precertify,
+                                   refusal_flags, verify)
+
+__all__ = ["Diagnostic", "GraphInfo", "PlanVerifyError", "VerifyResult",
+           "infer_shapes", "precertify", "refusal_flags", "verify"]

@@ -151,7 +151,8 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
             apct=None, counter=None, cache: Optional[PlanCache] = None,
             budget: int = 1 << 27, max_cutjoin_cut: int = 3,
             use_pallas: bool = False, cutjoin_kernel: bool = True,
-            domains: bool = False, local: bool = False) -> CompiledPlan:
+            domains: bool = False, local: bool = False,
+            verify: bool = True) -> CompiledPlan:
     """Compile a pattern (or application pattern set) for one graph.
 
     Cache hit: deserialise the stored plan and lower it (no search).
@@ -187,6 +188,15 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
     ``.exists``.  Local candidates are priced against the committed
     count plan, so they reuse its cut tensors; the same lazy-superset
     cache rule as ``domains`` applies.
+
+    ``verify=True`` (the default) statically verifies every freshly
+    assembled plan *before* it is cached or lowered
+    (``repro.analysis.verify``): a frontend/costing bug that emits
+    malformed IR raises ``PlanVerifyError`` at compile time instead of
+    poisoning the cache, joins the degree bound precertifies skip the
+    runtime ``exact_block`` guard scan (``plan.meta["precert"]``), and
+    joins that could never take the kernel route are flagged to the
+    metrics registry (``analysis.always_refused``).
     """
     if isinstance(patterns, Pattern):
         patterns = (patterns,)
@@ -261,6 +271,20 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
         "cuts": {pattern_key(p): sorted(cand.cut) if cand.cut else None
                  for p, cand in selections},
     })
+    if verify:
+        from repro import analysis, obs
+        ginfo = analysis.GraphInfo.from_graph(graph)
+        # graph statistics ride in meta so cached plans re-verify their
+        # budget pass without the graph; the precert copy is advisory
+        # (observability/examples) — lowering recomputes the certificate
+        # from the graph it actually binds, never trusting cached meta
+        plan.meta["graph_info"] = ginfo.to_dict()
+        result = analysis.verify(plan, graph_info=ginfo, budget=budget)
+        result.raise_if_failed()
+        plan.meta["precert"] = dict(result.precert)
+        for diag in result.warnings:
+            if diag.code == "always-refused":
+                obs.counter("analysis.always_refused")
     if use_cache:
         cache.put(key, plan)
     return lower(plan, graph, counter=counter, use_pallas=use_pallas,

@@ -58,16 +58,23 @@ class PlanCache:
     it lives only as long as the process."""
 
     def __init__(self, path: Optional[str] = None,
-                 max_disk_entries: Optional[int] = None):
+                 max_disk_entries: Optional[int] = None,
+                 verify: bool = True):
         self.path = path
         self.max_disk_entries = max_disk_entries
+        self.verify = verify
         self._mem: dict = {}
         # instance-exact counters that mirror into the process metrics
-        # registry (``plancache.hits`` / ``.misses`` / ``.evictions``);
-        # the ``hits``/``misses``/``evictions`` attributes stay the
-        # public surface via properties below
+        # registry (``plancache.hits`` / ``.misses`` / ``.evictions`` /
+        # ``.format_misses`` / ``.verify_rejects``); the attribute names
+        # stay the public surface via properties below.  ``format_misses``
+        # counts entries the parser rejected (truncated JSON, stale
+        # version, dropped field), ``verify_rejects`` entries that parsed
+        # but failed static verification (semantic corruption the version
+        # check can't see) — both are clean misses on top of ``misses``.
         self.stats = obs.StatsView(
-            "plancache", keys=("hits", "misses", "evictions"),
+            "plancache", keys=("hits", "misses", "evictions",
+                               "format_misses", "verify_rejects"),
             tier="disk" if path else "mem")
         if path:
             os.makedirs(path, exist_ok=True)
@@ -96,13 +103,26 @@ class PlanCache:
     def evictions(self, v: int):
         self.stats["evictions"] = v
 
+    @property
+    def format_misses(self) -> int:
+        return self.stats["format_misses"]
+
+    @property
+    def verify_rejects(self) -> int:
+        return self.stats["verify_rejects"]
+
     def _file(self, key: str) -> str:
         return os.path.join(self.path, f"plan-{key}.json")
 
     def _load_disk(self, key: str) -> Optional[Plan]:
-        """Parse the on-disk entry into the memory tier, or None for a
-        missing / truncated / stale-version file.  A successful read
-        refreshes the file's mtime (LRU recency for eviction)."""
+        """Parse and verify the on-disk entry into the memory tier, or
+        None for a missing / truncated / stale-version / semantically
+        corrupt file.  Parse failures (``PlanFormatError``, bad JSON,
+        dropped fields) count as ``format_misses``; entries that parse
+        but fail the static verifier — bit flips the schema can't see,
+        like an out-of-range axis — count as ``verify_rejects``.  Either
+        way the entry recompiles instead of half-loading.  A successful
+        read refreshes the file's mtime (LRU recency for eviction)."""
         f = self._file(key)
         if not os.path.exists(f):
             return None
@@ -111,7 +131,13 @@ class PlanCache:
                 plan = Plan.from_json(fh.read())
         except (json.JSONDecodeError, KeyError, ValueError,
                 OSError):                  # corrupt entry: recompile
+            self.stats["format_misses"] += 1
             return None
+        if self.verify:
+            from repro import analysis
+            if not analysis.verify(plan).ok:
+                self.stats["verify_rejects"] += 1
+                return None
         try:
             os.utime(f)                    # mark recently used
         except OSError:
@@ -142,7 +168,8 @@ class PlanCache:
                 return os.path.getmtime(f)
             except OSError:
                 return 0.0
-        now = time.time()                  # wall clock: mtimes are wall
+        # eviction ages compare against file mtimes, which are wall time
+        now = time.time()              # lint: allow=no-time-time
         for f in sorted(files, key=_mtime)[:excess]:
             try:
                 st = os.stat(f)
@@ -210,3 +237,4 @@ class PlanCache:
     def clear(self):
         self._mem.clear()
         self.hits = self.misses = self.evictions = 0
+        self.stats["format_misses"] = self.stats["verify_rejects"] = 0

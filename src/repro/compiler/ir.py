@@ -43,8 +43,10 @@ Ops
 Every op is a frozen dataclass with a ``to_dict``/``from_dict`` pair;
 ``Plan`` serialises to canonical JSON so cached plans survive processes.
 Serialised plans carry ``PLAN_FORMAT_VERSION``; deserialising any other
-version raises ``ValueError``, which the on-disk cache treats as a clean
-miss — stale-format entries recompile instead of half-loading.
+version raises ``PlanFormatError`` (a ``ValueError``), which the on-disk
+cache treats as a clean miss — stale-format entries recompile instead of
+half-loading.  Structural/semantic validity beyond the schema is the
+static verifier's job (``repro.analysis.verify``).
 """
 from __future__ import annotations
 
@@ -61,6 +63,14 @@ from repro.core.pattern import (LABEL_STRIDE, Pattern, encode_free_label,
                                 free_skeleton, mark_free)
 
 Term = Tuple[float, str]                    # (coefficient, node key)
+
+
+class PlanFormatError(ValueError):
+    """A serialised plan was rejected before IR construction: wrong
+    format version or an unknown op kind.  ValueError subclass so
+    existing clean-miss handlers (``PlanCache._load_disk``) keep
+    working; the cache counts these separately from semantic verify
+    rejects."""
 
 # serialised-plan schema version; bump on any incompatible IR change so
 # on-disk caches written by older code miss cleanly (see Plan.from_dict)
@@ -309,7 +319,7 @@ def op_from_dict(d: dict):
                           tuple((c, r) for c, r in d["corrections"]),
                           tuple(tuple(a) for a in d["axes"])
                           if d.get("axes") is not None else None)
-    raise ValueError(f"unknown op kind {kind!r}")
+    raise PlanFormatError(f"unknown op kind {kind!r}")
 
 
 # -- the plan --------------------------------------------------------------------
@@ -380,8 +390,8 @@ class Plan:
     def from_dict(cls, d: dict) -> "Plan":
         version = d.get("version", 1)
         if version != PLAN_FORMAT_VERSION:
-            raise ValueError(f"plan format version {version}, "
-                             f"expected {PLAN_FORMAT_VERSION}")
+            raise PlanFormatError(f"plan format version {version}, "
+                                  f"expected {PLAN_FORMAT_VERSION}")
         plan = cls(meta=dict(d.get("meta", {})))
         for nd in d["nodes"]:
             plan.add(op_from_dict(nd))

@@ -93,6 +93,7 @@ class CompiledPlan:
         self._masks: Dict[int, np.ndarray] = {}
         self._factors: Dict[tuple, np.ndarray] = {}
         self._factor_maxes: Dict[tuple, float] = {}
+        self._precert: Optional[Dict[str, int]] = None
         # attach an ``obs.Tracer`` here to record per-node span trees on
         # every public read; None (the default) costs one is-None check
         # per node eval — nothing else
@@ -317,17 +318,51 @@ class CompiledPlan:
         return v
 
     def _join_factors(self, node):
-        """(factors, axes, maxes) of a CutJoin/LocalCount node: each
-        factor combined over its *own* axis subset (axis-subset factors
-        stay at their own size), with the cached max magnitudes the
-        exactness guard consumes."""
+        """(factors, axes) of a CutJoin/LocalCount node: each factor
+        combined over its *own* axis subset (axis-subset factors stay at
+        their own size).  Max magnitudes are *not* scanned here — the
+        exactness guard (``_guard_block``) only pays for them when no
+        static certificate covers the node, and the XLA route never
+        needs them at all."""
         axes = node.factor_axes()
-        Ms, maxes = [], []
-        for terms, ax in zip(node.factors, axes):
-            M = self._combine(terms, len(ax))
-            Ms.append(M)
-            maxes.append(self._factor_max(terms, len(ax), M))
-        return Ms, axes, maxes
+        Ms = [self._combine(terms, len(ax))
+              for terms, ax in zip(node.factors, axes)]
+        return Ms, axes
+
+    def _precertified(self) -> Dict[str, int]:
+        """Statically certified ``exact_block`` chunks, computed once
+        per compiled plan from the *bound graph* — never trusted from
+        ``plan.meta`` (a corrupted cached certificate would silently
+        break kernel exactness; recomputing from the graph the plan is
+        actually bound to costs microseconds and is always sound)."""
+        if self._precert is None:
+            from repro import analysis
+            self._precert = analysis.precertify(
+                self.plan, analysis.GraphInfo.from_graph(self.graph))
+        return self._precert
+
+    def _guard_block(self, node, Ms, axes):
+        """The ``exact_block`` guard for one join.  Precertified nodes
+        trust the static certificate — no device→host factor scan on
+        the serving path; everything else scans factor magnitudes under
+        a traced ``guard-scan`` span, so the cost the certificate
+        removes stays visible in traces."""
+        from repro.kernels import ops
+        static = self._precertified().get(node.key)
+        if static is not None:
+            block = ops.runtime_block(static)
+            obs.counter("kernel.exact_block", outcome="precertified")
+            self._annotate(exact_block=block, precertified=True)
+            return block
+        tr = self.tracer
+        ctx = (tr.span(f"guard:{node.key}", kind="guard-scan")
+               if tr is not None else nullcontext())
+        with ctx:
+            maxes = [self._factor_max(terms, len(ax), M)
+                     for terms, M, ax in zip(node.factors, Ms, axes)]
+            block = ops.cutjoin_exact_block(Ms, maxes=maxes)
+        self._annotate(exact_block=block)
+        return block
 
     def _dense_expand(self, Ms, axes, k: int):
         """Broadcast axis-subset factors to the full (n,)*k cut grid —
@@ -355,12 +390,11 @@ class CompiledPlan:
         return out
 
     def _eval_cutjoin(self, node: CutJoin) -> float:
-        Ms, axes, maxes = self._join_factors(node)
+        Ms, axes = self._join_factors(node)
         self._annotate(factor_shapes=[list(np.shape(M)) for M in Ms])
         if self.cutjoin_kernel and node.cut_size <= 3:
             from repro.kernels import ops
-            block = ops.cutjoin_exact_block(Ms, maxes=maxes)
-            self._annotate(exact_block=block)
+            block = self._guard_block(node, Ms, axes)
             if block is not None:            # f32 chunks provably exact
                 self._annotate(route="kernel")
                 if node.cut_size <= 2:
@@ -391,7 +425,7 @@ class CompiledPlan:
         guard admits the factors, else the jitted f64 XLA mask-and-sum
         (also the kernel's bit-for-bit oracle); corrections are already
         vector-sized and subtract after the reduce."""
-        Ms, axes, maxes = self._join_factors(node)
+        Ms, axes = self._join_factors(node)
         self._annotate(factor_shapes=[list(np.shape(M)) for M in Ms])
         if node.cut_size == 1 or len(node.keep) == node.cut_size:
             self._annotate(route="dense-product")
@@ -408,8 +442,7 @@ class CompiledPlan:
         out = None
         if self.cutjoin_kernel:
             from repro.kernels import ops
-            block = ops.cutjoin_exact_block(Ms, maxes=maxes)
-            self._annotate(exact_block=block)
+            block = self._guard_block(node, Ms, axes)
             if block is not None:            # f32 chunks provably exact
                 self._annotate(route="kernel-keep")
                 if node.cut_size == 2:
@@ -470,7 +503,17 @@ class CompiledPlan:
 
 def lower(plan: Plan, graph: Graph, *, counter=None, use_pallas=False,
           from_cache=False, budget: int = 1 << 27,
-          cutjoin_kernel: bool = True) -> CompiledPlan:
+          cutjoin_kernel: bool = True, verify: bool = False) -> CompiledPlan:
+    """Bind a plan to a graph.  ``verify=True`` runs the static
+    verifier against this graph first and raises ``PlanVerifyError``
+    instead of binding a malformed plan — for plans that arrived from
+    outside ``compiler.compile`` (hand-built, deserialized, mutated),
+    which already verifies what it commits."""
+    if verify:
+        from repro import analysis
+        analysis.verify(
+            plan, graph_info=analysis.GraphInfo.from_graph(graph),
+            budget=budget).raise_if_failed()
     return CompiledPlan(plan, graph, counter=counter, use_pallas=use_pallas,
                         from_cache=from_cache, budget=budget,
                         cutjoin_kernel=cutjoin_kernel)

@@ -148,6 +148,17 @@ def cutjoin_reduce3_keep(factors, axes, *, keep, n, distinct=True,
                                interpret=interpret)
 
 
+def runtime_block(block: int, *, interpret=None) -> int:
+    """Clamp a statically certified ``exact_block`` chunk to the running
+    backend's tile cap (the same 1024-interpret / 128-TPU cap
+    ``cutjoin_exact_block`` applies).  Certificates are computed against
+    the interpret-mode maximum (``analysis.verify.precertify``); a
+    smaller chunk is always at least as exact, so clamping preserves the
+    guarantee."""
+    cap = 1024 if _auto_interpret(interpret) else 128
+    return min(int(block), cap)
+
+
 def cutjoin_exact_block(factors, *, interpret=None, maxes=None):
     """Chunk size for which ``cutjoin_reduce`` / ``cutjoin_reduce3`` is
     exact on the given integer-valued factors, or None when no f32

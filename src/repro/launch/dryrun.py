@@ -182,17 +182,17 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     chips = mesh.devices.size
     rules = rules_for(cfg, shape, rule_overrides)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     with sharding_ctx(mesh, rules):
         fn, args, in_sh, out_sh, donate = build_cell(
             cfg, shape, mesh, rules, microbatches)
         jf = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                      donate_argnums=donate)
         lowered = jf.lower(*args)
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     score_dims = ((shape.seq, min(cfg.flash_block, shape.seq))

@@ -72,6 +72,10 @@ def main(argv=None):
                     help="hottest vertices to report for --local-counts "
                     "(the streaming top-k reader; the full per-vertex "
                     "vector is never returned)")
+    ap.add_argument("--verify-plans", action="store_true",
+                    help="print the static verifier's report for every "
+                         "compiled plan (diagnostics + exact_block "
+                         "precertification summary)")
     ap.add_argument("--trace", default=None, metavar="FILE",
                     help="record per-node execution spans on compiled "
                     "plans and write the trace to FILE (JSON; a "
@@ -86,6 +90,26 @@ def main(argv=None):
     if args.trace:
         from repro import obs
         tracer = obs.Tracer()
+
+    def verify_report(cp):
+        """Re-verify a compiled plan and print the findings — what an
+        operator checks when a served count looks off (the compile path
+        already verified; this proves the *cached/loaded* plan still
+        does)."""
+        if not args.verify_plans:
+            return
+        from repro import analysis
+        res = analysis.verify(cp.plan)
+        pre = cp.plan.meta.get("precert") or {}
+        guarded = sum(1 for n in cp.plan.nodes.values()
+                      if getattr(n, "cut_size", 0) and hasattr(n, "factors"))
+        print(f"  verify: {'OK' if res.ok else 'FAILED'} — "
+              f"{len(cp.plan.nodes)} nodes, {len(res.errors)} error(s), "
+              f"{len(res.warnings)} warning(s); "
+              f"{len(pre)}/{guarded} join(s) precertified "
+              f"(skip the runtime guard scan)")
+        for d in res.diagnostics:
+            print(f"    {d}")
 
     if args.app == "fsm" and args.labels == 0:
         args.labels = 6
@@ -116,6 +140,7 @@ def main(argv=None):
                   f"{len(cp.plan.nodes)} plan nodes "
                   f"({'cache hit' if cp.from_cache else 'cache miss'}, "
                   f"{t_compile:.2f}s)")
+            verify_report(cp)
         for p, v in sorted(table.items(), key=lambda t: t[0].m):
             print(f"  {args.k}-motif m={p.m:2d} {sorted(p.edges)}: "
                   f"{v:,.0f}")
@@ -134,6 +159,7 @@ def main(argv=None):
             cp = compiler.compile(p, g, cache=plan_cache,
                                   local=args.local_counts)
             cp.tracer = tracer
+            verify_report(cp)
             c = cp.count(p)
             if args.local_counts:
                 # the top-k reader straight off the plan just compiled

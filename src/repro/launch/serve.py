@@ -41,9 +41,9 @@ def main(argv=None):
         T = int(rng.integers(4, 17))
         prompt = rng.integers(0, cfg.vocab_size, T).astype(np.int32)
         b.submit(Request(uid=i, prompt=prompt, max_new_tokens=args.max_new))
-    t0 = time.time()
+    t0 = time.perf_counter()
     steps = b.run_to_completion()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     tokens = sum(len(r.generated) for r in b.finished)
     print(f"served {len(b.finished)}/{args.requests} requests, "
           f"{tokens} tokens in {steps} engine steps, {dt:.2f}s "

@@ -178,13 +178,19 @@ class PatternQueryBatcher:
     overlapping quotient contractions.
     """
 
-    def __init__(self, graph, *, cache=None, apct=None, max_batch: int = 8):
+    def __init__(self, graph, *, cache=None, apct=None, max_batch: int = 8,
+                 verify_plans: bool = True):
         from repro.compiler import PlanCache
         from repro.core.counting import CountingEngine
         self.graph = graph
         self.cache = cache if cache is not None else PlanCache()
         self.apct = apct
         self.max_batch = max_batch
+        # statically verify every plan this batcher compiles (and, via
+        # the cache's own verify pass, every plan it loads from disk) —
+        # a malformed plan becomes a compile-phase fallback, never a
+        # wrong count served to a request
+        self.verify_plans = verify_plans
         self.counter = CountingEngine(graph)
         self.queue: collections.deque = collections.deque()
         self.finished: list = []
@@ -223,7 +229,8 @@ class PatternQueryBatcher:
         try:
             cp = compiler.compile(patterns, self.graph, apct=self.apct,
                                   counter=self.counter, cache=self.cache,
-                                  domains=domains, local=local)
+                                  domains=domains, local=local,
+                                  verify=self.verify_plans)
         except Exception:
             return None
         self.stats["cache_hits" if cp.from_cache else "compiles"] += 1

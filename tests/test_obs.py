@@ -152,10 +152,17 @@ def test_span_nesting_matches_ir_structure():
             if s.kind == "execute":
                 assert len(s.children) <= 1
                 continue
+            if s.kind == "guard-scan":
+                # the exact_block factor scan, nested under its join —
+                # not an IR node, and it evaluates nothing
+                assert not s.children
+                continue
             node = cp.plan.nodes[s.name]
             assert type(node).__name__ == s.kind
             refs = set(node.refs())
             for c in s.children:
+                if c.kind == "guard-scan":
+                    continue
                 assert c.name in refs, (s.name, c.name, refs)
 
     check()
@@ -377,7 +384,8 @@ def test_kernel_call_counters():
     ops.cutjoin_reduce([M, M])
     assert reg.get("kernel.calls", op="cutjoin_reduce", cut=2) == before + 1
     granted = reg.get("kernel.exact_block", outcome="granted")
-    assert granted >= 1
+    precertified = reg.get("kernel.exact_block", outcome="precertified")
+    assert granted + precertified >= 1
 
 
 def test_api_compile_fallback_counter(monkeypatch):
