@@ -10,7 +10,8 @@
 """
 from repro.analysis.verify import (Diagnostic, GraphInfo, PlanVerifyError,
                                    VerifyResult, infer_shapes, precertify,
-                                   refusal_flags, verify)
+                                   refusal_flags, shard_check, verify)
 
 __all__ = ["Diagnostic", "GraphInfo", "PlanVerifyError", "VerifyResult",
-           "infer_shapes", "precertify", "refusal_flags", "verify"]
+           "infer_shapes", "precertify", "refusal_flags", "shard_check",
+           "verify"]

@@ -24,6 +24,13 @@ can't catch — violations that pass every test but rot the codebase:
 ``no-mutable-default``  mutable default argument values (list/dict/set
                         literals or constructors) — shared across calls,
                         a classic aliasing bug.
+``mesh-guard``          a ``shard_map`` call whose enclosing function
+                        never enters ``meshes.sharding_ctx``.  Sharded
+                        code that bypasses the context executes against
+                        whatever mesh happens to be ambient, and
+                        logical-axis ``constrain`` calls inside the
+                        region silently no-op or resolve against the
+                        wrong mesh.
 
 Suppress any rule on one line with a ``lint: allow=<rule>`` comment on
 that line.  CLI::
@@ -41,11 +48,14 @@ from pathlib import Path
 from typing import List, Optional
 
 RULES = ("no-time-time", "kernel-guard", "ir-dict-complete",
-         "no-mutable-default")
+         "no-mutable-default", "mesh-guard")
 
 # the public kernel wrappers whose exactness depends on the block bound
+# (single-device tier and its mesh-sharded analogues alike)
 _KERNEL_WRAPPERS = {"cutjoin_reduce", "cutjoin_reduce_keep",
-                    "cutjoin_reduce3", "cutjoin_reduce3_keep"}
+                    "cutjoin_reduce3", "cutjoin_reduce3_keep",
+                    "sharded_cutjoin", "sharded_cutjoin_keep",
+                    "sharded_cutjoin3", "sharded_cutjoin3_keep"}
 # calls that consult the guard / certificate and so satisfy the protocol
 _GUARD_CALLS = {"cutjoin_exact_block", "exact_block", "precertify",
                 "runtime_block", "_guard_block"}
@@ -106,6 +116,7 @@ def lint_source(source: str, path: str = "<string>") -> List[Finding]:
     out.extend(_rule_time_time(tree, path, lines))
     out.extend(_rule_mutable_default(tree, path, lines))
     out.extend(_rule_kernel_guard(tree, path, lines))
+    out.extend(_rule_mesh_guard(tree, path, lines))
     out.extend(_rule_ir_dict_complete(tree, path, lines))
     out.sort(key=lambda f: (f.line, f.rule))
     return out
@@ -173,6 +184,42 @@ def _rule_kernel_guard(tree, path, lines):
                         f"{name}() called without consulting the "
                         f"exact_block guard in the enclosing scope — f32 "
                         f"chunks are only exact under the guard's bound"))
+            walk(child, scopes)
+
+    walk(tree, [])
+    return out
+
+
+def _rule_mesh_guard(tree, path, lines):
+    """Every call named exactly ``shard_map`` must sit in a function (or
+    class) that also enters ``meshes.sharding_ctx`` — the mesh-tier
+    contract (``distributed/cutjoin.py`` keeps it by construction).
+    Deliberately name-based: an aliased import (``from ... import
+    shard_map as _sm``) is the escape hatch for non-GPM users with their
+    own context discipline (e.g. ``models/moe.py``)."""
+    out = []
+
+    def ctx_present(scope) -> bool:
+        return any(_call_name(c.func) == "sharding_ctx"
+                   for c in _calls_in(scope))
+
+    def walk(node, scopes):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                walk(child, scopes + [child])
+                continue
+            if isinstance(child, ast.Call):
+                name = _call_name(child.func)
+                if name == "shard_map" and \
+                        not any(ctx_present(s) for s in scopes) and \
+                        not _suppressed(lines, child.lineno, "mesh-guard"):
+                    out.append(Finding(
+                        "mesh-guard", path, child.lineno,
+                        "shard_map() called without entering "
+                        "meshes.sharding_ctx in the enclosing scope — "
+                        "sharded code must pin the mesh it executes "
+                        "against"))
             walk(child, scopes)
 
     walk(tree, [])

@@ -581,8 +581,8 @@ def _guarded_nodes(plan):
                 yield key, node
 
 
-def precertify(plan: Plan, info: GraphInfo, *,
-               max_block: int = 1024) -> Dict[str, int]:
+def precertify(plan: Plan, info: GraphInfo, *, max_block: int = 1024,
+               num_shards: int = 1) -> Dict[str, int]:
     """Statically certify ``exact_block`` for every guarded join whose
     factor magnitudes are boundable: node key -> chunk size for which
     the f32-chunk kernel is provably exact on *any* graph matching
@@ -590,7 +590,17 @@ def precertify(plan: Plan, info: GraphInfo, *,
     factor tensors device→host per query (see
     ``lowering.CompiledPlan._guard_block``).  The bound is conservative
     (degree-product worst case), so a certificate is always sound; its
-    absence just means the runtime scan decides."""
+    absence just means the runtime scan decides.
+
+    ``num_shards`` extends the certificate to the block-sharded tier
+    (``distributed/cutjoin``): each shard's chunks accumulate products
+    of *slices* of the same factors, and a slice's max magnitude never
+    exceeds the global max the bound dominates — so the single-device
+    certificate certifies every per-shard block as-is, for any shard
+    count.  The parameter exists so callers state the mesh they verify
+    against (and so a future tier with shard-dependent chunking has a
+    seam); it cannot change the result, by the argument above."""
+    assert num_shards >= 1, num_shards
     out: Dict[str, int] = {}
     for key, node in _guarded_nodes(plan):
         bounds = [_factor_bound(plan, terms, info) for terms in node.factors]
@@ -600,6 +610,67 @@ def precertify(plan: Plan, info: GraphInfo, *,
         if block is not None:
             out[key] = int(block)
     return out
+
+
+def shard_check(plan: Plan, info: GraphInfo, num_shards: int, *,
+                budget: Optional[int] = None) -> VerifyResult:
+    """Shard-legality of one plan on a ``num_shards``-way data mesh —
+    advisory diagnostics layered over ``verify`` (run that first for
+    structure/shapes):
+
+    ``shard-small-graph``      n < shards: the executor falls back to
+                               single-device wholesale
+                               (``lowering._mesh_shards``) — a mesh that
+                               size buys nothing on this graph.
+    ``shard-indivisible``      cut axis 0 does not divide evenly: legal
+                               (the sharded tier zero-pads axis-0
+                               carriers to the shard x tile multiple,
+                               which is value-preserving), but the last
+                               shard streams padding — noted so sizing
+                               is a conscious choice.
+    ``shard-budget-overflow``  a join's *per-shard* resident factor
+                               elements (axis-0 carriers at n/shards
+                               rows, the rest replicated) still exceed
+                               4x budget — sharding did not buy the
+                               memory headroom the budget models.
+
+    All warnings: none makes a sharded execution incorrect — per-shard
+    blocks stay certified (see ``precertify``) and padding preserves
+    values — they flag mesh/graph pairings that waste the mesh."""
+    assert num_shards >= 1, num_shards
+    res = VerifyResult()
+    if num_shards <= 1:
+        return res
+    n = info.n
+    if n < num_shards:
+        res.diagnostics.append(_warn(
+            "shard-small-graph", "*",
+            f"graph has {n} vertices but the mesh {num_shards} shards — "
+            f"execution falls back to single-device"))
+        return res
+    if n % num_shards:
+        res.diagnostics.append(_warn(
+            "shard-indivisible", "*",
+            f"n = {n} does not divide over {num_shards} shards — the "
+            f"padding path runs (correct, but the last shard streams "
+            f"{(-n) % num_shards} zero rows)"))
+    if budget is None:
+        b = plan.meta.get("budget")
+        budget = int(b) if isinstance(b, (int, float)) else None
+    if budget is not None:
+        cap = 4 * budget
+        rows = -(-n // num_shards)
+        for key, node in _guarded_nodes(plan):
+            elems = sum(
+                rows * n ** (len(ax) - 1) if 0 in ax else n ** len(ax)
+                for ax in node.factor_axes())
+            if elems > cap:
+                res.diagnostics.append(_warn(
+                    "shard-budget-overflow", key,
+                    f"per-shard factor residency {elems:.3e} elements "
+                    f"still over 4x budget ({cap:.3e}) at "
+                    f"{num_shards} shards"))
+    return res
 
 
 def refusal_flags(plan: Plan, info: GraphInfo) -> List[Diagnostic]:

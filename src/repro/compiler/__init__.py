@@ -152,7 +152,7 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
             budget: int = 1 << 27, max_cutjoin_cut: int = 3,
             use_pallas: bool = False, cutjoin_kernel: bool = True,
             domains: bool = False, local: bool = False,
-            verify: bool = True) -> CompiledPlan:
+            verify: bool = True, mesh=None) -> CompiledPlan:
     """Compile a pattern (or application pattern set) for one graph.
 
     Cache hit: deserialise the stored plan and lower it (no search).
@@ -197,6 +197,14 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
     runtime ``exact_block`` guard scan (``plan.meta["precert"]``), and
     joins that could never take the kernel route are flagged to the
     metrics registry (``analysis.always_refused``).
+
+    ``mesh`` (a 1-D ``("data",)`` jax Mesh, e.g. ``meshes.data_mesh()``)
+    binds the plan to the sharded join tier: guarded CutJoin/LocalCount
+    nodes execute block-sharded over cut axis 0 (bit-for-bit identical
+    — see ``distributed/cutjoin.py``), and plan selection prices joins
+    per-device with a collective surcharge (``costing``, ``devices=``).
+    The mesh does not enter the cache key: a cached plan selected
+    without a mesh is still numerically valid on one, and vice versa.
     """
     if isinstance(patterns, Pattern):
         patterns = (patterns,)
@@ -224,7 +232,8 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
                     and (not local or plan.meta.get("local")):
                 return lower(plan, graph, counter=counter,
                              use_pallas=use_pallas, from_cache=True,
-                             budget=budget, cutjoin_kernel=cutjoin_kernel)
+                             budget=budget, cutjoin_kernel=cutjoin_kernel,
+                             mesh=mesh)
             # config matches but the stored plan lacks a requested
             # flavor: recompile with the UNION of requested and stored
             # flags, so the overwrite supersets the entry instead of
@@ -241,9 +250,11 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
         max_cutjoin_cut=max_cutjoin_cut)) for p in patterns]
     label_fracs = _label_fracs(patterns, graph)
     node_costs: dict = {}
+    from repro.distributed import meshes as _meshes
     selections, total_cost = costing.select_candidates(
         per_pattern, apct, graph.n, budget, counter=counter,
-        label_fracs=label_fracs, node_costs=node_costs)
+        label_fracs=label_fracs, node_costs=node_costs,
+        devices=_meshes.num_shards(mesh))
     plan = frontend.assemble(selections)
     if domains:
         for p in patterns:
@@ -289,4 +300,4 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
         cache.put(key, plan)
     return lower(plan, graph, counter=counter, use_pallas=use_pallas,
                  from_cache=False, budget=budget,
-                 cutjoin_kernel=cutjoin_kernel)
+                 cutjoin_kernel=cutjoin_kernel, mesh=mesh)

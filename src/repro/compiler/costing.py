@@ -68,6 +68,26 @@ DENSE_TILE = CM.DENSE_TILE
 KERNEL_STREAM_DISCOUNT = 4.0
 
 
+def tile_floor(n: int, width: int, tile: int = DENSE_TILE) -> float:
+    """Dense-tile streaming floor of one ``width``-dim pass over an
+    ``n``-extent grid, in tile units.
+
+    For n >= tile this is the historical ``(n / tile) ** width``.  Below
+    one tile the historical formula collapsed to a flat 1.0 for every
+    width and every candidate — the ROADMAP "sharp edge": at n <= 128
+    all floors tied, so plan selection between candidates was decided
+    by count terms alone and tests at small n never exercised the floor
+    side of the model.  Instead the leading axis now scales with the
+    *actual* tile extent ``min(n, tile)`` the kernels stream (they clamp
+    their block to n and pad to it — see ``kernels/matreduce``), so the
+    floor stays proportional to n and two candidates with different
+    factor counts price differently at any n.  Width <= 0 (scalar
+    outputs) floors at 1.0 — reading a result is never free."""
+    if width <= 0:
+        return 1.0
+    return (max(n, 1) / tile) * (max(n, tile) / tile) ** (width - 1)
+
+
 def _label_selectivity(labels, label_fracs) -> float:
     """Fraction of vertex tuples surviving the label mask: Π over the
     (sub)pattern's vertices of their label's vertex frequency."""
@@ -106,10 +126,9 @@ def _contract_cost(node: Contract, apct, n_vertices: int,
         cnt = (apct.query(sub) if sub.is_connected()
                else CM._disc(apct, q, done))
         cnt *= _label_selectivity(sub.labels, label_fracs)
-        floor = (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** (width + 1)
-        total += cnt + floor
+        total += cnt + tile_floor(n_vertices, width + 1)
     # free output tensor materialisation
-    total += (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** len(node.free)
+    total += tile_floor(n_vertices, len(node.free))
     return total
 
 
@@ -127,26 +146,36 @@ def _materialised(node: Contract, counter) -> bool:
 
 
 def _kernel_join_cost(cut_size: int, factor_axes, n_vertices: int,
-                      budget: int):
+                      budget: int, devices: int = 1):
     """Shared kernel-tier join pricing for CutJoin and LocalCount — the
     two must stay in lockstep for scalar-count vs keep-axis plan
     selection to be meaningful.  Returns inf when a |cut| >= 3 join's
     Σ factor elements (axis-subset factors at their own size) exceed
     the pool headroom; otherwise one pass over the tile grid plus
     per-factor read traffic at each factor's own width, at streamed-f32
-    rates."""
+    rates.
+
+    ``devices > 1`` prices the sharded tier (``distributed/cutjoin``):
+    the grid and the axis-0 factor traffic divide across the mesh
+    (per-device APCT), plus a log2(d) collective surcharge for the
+    tree-reduce behind the closing ``psum``/all-gather — so the model
+    prefers sharded execution exactly where per-device savings beat the
+    collective, and a 1-device mesh prices identically to no mesh."""
     if cut_size >= 3:
         factor_elems = sum(n_vertices ** len(ax) for ax in factor_axes)
         if factor_elems > 4 * budget:
             return math.inf
-    tiles = (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** cut_size
-    traffic = sum((max(n_vertices, DENSE_TILE) / DENSE_TILE) ** len(ax)
-                  for ax in factor_axes)
-    return (tiles + traffic) / KERNEL_STREAM_DISCOUNT
+    tiles = tile_floor(n_vertices, cut_size)
+    traffic = sum(tile_floor(n_vertices, len(ax)) for ax in factor_axes)
+    d = max(int(devices), 1)
+    cost = (tiles + traffic) / d / KERNEL_STREAM_DISCOUNT
+    if d > 1:
+        cost += math.log2(d)
+    return cost
 
 
 def node_cost(node, apct, n_vertices: int, budget: int = 1 << 27,
-              counter=None, label_fracs=None) -> float:
+              counter=None, label_fracs=None, devices: int = 1) -> float:
     if isinstance(node, Contract):
         if _materialised(node, counter):
             return 0.0
@@ -166,14 +195,14 @@ def node_cost(node, apct, n_vertices: int, budget: int = 1 << 27,
         # 3-D-factor formulation prices infinite and the selection falls
         # back to |cut| <= 2 candidates or the dense Möbius route.
         if node.cut_size > 3:
-            # dense-mask join beyond the kernel tiers
+            # dense-mask join beyond the kernel tiers (single-device:
+            # the sharded tier stops at |cut| = 3, see lowering)
             if n_vertices ** node.cut_size > 4 * budget:
                 return math.inf
-            tiles = (max(n_vertices, DENSE_TILE)
-                     / DENSE_TILE) ** node.cut_size
+            tiles = tile_floor(n_vertices, node.cut_size)
             return tiles * max(len(node.factors), 1)
         return _kernel_join_cost(node.cut_size, node.factor_axes(),
-                                 n_vertices, budget)
+                                 n_vertices, budget, devices)
     if isinstance(node, ShrinkageCorrect):
         return float(len(node.corrections) + 1)
     if isinstance(node, LocalCount):
@@ -190,8 +219,8 @@ def node_cost(node, apct, n_vertices: int, budget: int = 1 << 27,
         if out_elems > 4 * budget:
             return math.inf                  # output itself too wide
         join = _kernel_join_cost(node.cut_size, node.factor_axes(),
-                                 n_vertices, budget)
-        out = (max(n_vertices, DENSE_TILE) / DENSE_TILE) ** len(node.keep)
+                                 n_vertices, budget, devices)
+        out = tile_floor(n_vertices, len(node.keep))
         return join + out + float(len(node.corrections))
     if isinstance(node, MobiusCombine):
         return float(len(node.terms))
@@ -200,14 +229,15 @@ def node_cost(node, apct, n_vertices: int, budget: int = 1 << 27,
 
 def candidate_cost(cand: Candidate, apct, n_vertices: int,
                    shared: Dict[str, float], budget: int = 1 << 27,
-                   counter=None, label_fracs=None) -> float:
+                   counter=None, label_fracs=None,
+                   devices: int = 1) -> float:
     """Cost of one candidate given already-scheduled nodes (cost 0)."""
     total = 0.0
     for node in cand.nodes:
         if node.key in shared:
             continue
         total += node_cost(node, apct, n_vertices, budget, counter,
-                           label_fracs)
+                           label_fracs, devices)
         if total == math.inf:
             return math.inf
     return total
@@ -215,17 +245,18 @@ def candidate_cost(cand: Candidate, apct, n_vertices: int,
 
 def commit(cand: Candidate, apct, n_vertices: int,
            shared: Dict[str, float], budget: int = 1 << 27, counter=None,
-           label_fracs=None):
+           label_fracs=None, devices: int = 1):
     for node in cand.nodes:
         if node.key not in shared:
             shared[node.key] = node_cost(node, apct, n_vertices, budget,
-                                         counter, label_fracs)
+                                         counter, label_fracs, devices)
 
 
 def select_candidates(per_pattern: List[Tuple[Pattern, List[Candidate]]],
                       apct, n_vertices: int,
                       budget: int = 1 << 27, counter=None,
-                      label_fracs=None, node_costs: Dict[str, float] = None):
+                      label_fracs=None, node_costs: Dict[str, float] = None,
+                      devices: int = 1):
     """Greedy joint selection over the application: for each pattern pick
     the cheapest candidate under the current shared pool, then commit its
     nodes.  Returns ([(pattern, winner)], total_cost).
@@ -236,7 +267,9 @@ def select_candidates(per_pattern: List[Tuple[Pattern, List[Candidate]]],
     receives the per-node APCT cost of every committed node — the
     *predicted* side of the observability layer's drift report, stored
     on the plan so traced executions can pair each node's prediction
-    with its measured time."""
+    with its measured time.  ``devices`` is the execution mesh's shard
+    count (1 without a mesh): joins price per-device plus a collective
+    term (``_kernel_join_cost``), so selection sees the mesh."""
     shared: Dict[str, float] = {}
     out = []
     total = 0.0
@@ -244,7 +277,7 @@ def select_candidates(per_pattern: List[Tuple[Pattern, List[Candidate]]],
         best, bc = None, math.inf
         for cand in cands:
             c = candidate_cost(cand, apct, n_vertices, shared, budget,
-                               counter, label_fracs)
+                               counter, label_fracs, devices)
             if c < bc:
                 best, bc = cand, c
         if best is None:
@@ -255,7 +288,8 @@ def select_candidates(per_pattern: List[Tuple[Pattern, List[Candidate]]],
             out.append((p, cands[0]))
             total = math.inf
             continue
-        commit(best, apct, n_vertices, shared, budget, counter, label_fracs)
+        commit(best, apct, n_vertices, shared, budget, counter,
+               label_fracs, devices)
         out.append((p, best))
         total += bc
     if node_costs is not None:

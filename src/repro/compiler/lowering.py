@@ -82,13 +82,18 @@ class CompiledPlan:
     def __init__(self, plan: Plan, graph: Graph,
                  counter: Optional[CountingEngine] = None,
                  use_pallas: bool = False, from_cache: bool = False,
-                 budget: int = 1 << 27, cutjoin_kernel: bool = True):
+                 budget: int = 1 << 27, cutjoin_kernel: bool = True,
+                 mesh=None):
         self.plan = plan
         self.graph = graph
         self.counter = counter or CountingEngine(graph, budget=budget)
         self.use_pallas = use_pallas
         self.cutjoin_kernel = cutjoin_kernel
         self.from_cache = from_cache
+        # execution mesh for the sharded join tier (a 1-D ("data",) jax
+        # Mesh — see distributed/cutjoin.py); None keeps every route
+        # single-device
+        self.mesh = mesh
         self._values: Dict[str, object] = {}
         self._masks: Dict[int, np.ndarray] = {}
         self._factors: Dict[tuple, np.ndarray] = {}
@@ -389,13 +394,42 @@ class CompiledPlan:
                                        (n,) * k))
         return out
 
+    def _mesh_shards(self) -> int:
+        """Usable shard count for this plan's joins: 1 without a mesh
+        (or a trivial one); a graph smaller than the mesh falls back to
+        single-device — slicing fewer rows than devices would leave
+        idle shards and an all-padding grid on some of them."""
+        if self.mesh is None:
+            return 1
+        from repro.distributed import meshes
+        d = meshes.num_shards(self.mesh)
+        if d <= 1:
+            return 1
+        if self.graph.n < d:
+            obs.counter("cutjoin.shard_fallbacks", reason="small-n")
+            self._annotate(shard_fallback="small-n")
+            return 1
+        return d
+
     def _eval_cutjoin(self, node: CutJoin) -> float:
         Ms, axes = self._join_factors(node)
         self._annotate(factor_shapes=[list(np.shape(M)) for M in Ms])
+        shards = self._mesh_shards()
         if self.cutjoin_kernel and node.cut_size <= 3:
             from repro.kernels import ops
             block = self._guard_block(node, Ms, axes)
             if block is not None:            # f32 chunks provably exact
+                if shards > 1:
+                    from repro.distributed import cutjoin as dcj
+                    self._annotate(route="kernel-sharded",
+                                   mesh_axes=["data"], num_shards=shards)
+                    if node.cut_size <= 2:
+                        return dcj.sharded_cutjoin(
+                            Ms, mesh=self.mesh,
+                            distinct=node.cut_size >= 2, block=block)
+                    return dcj.sharded_cutjoin3(Ms, axes, n=self.graph.n,
+                                                mesh=self.mesh,
+                                                block=block)
                 self._annotate(route="kernel")
                 if node.cut_size <= 2:
                     return ops.cutjoin_reduce(Ms,
@@ -406,10 +440,21 @@ class CompiledPlan:
             # factor magnitudes exceed what chunked f32 can represent
             # exactly: fall through to the f64 XLA join
             obs.counter("cutjoin.kernel_fallbacks", cut=node.cut_size)
-        self._annotate(route="xla-dense")
         Ms = self._dense_expand(Ms, axes, node.cut_size)
         if node.cut_size >= 2:               # injectivity of the cut tuple
             Ms.append(self._mask(node.cut_size))
+        if shards > 1 and node.cut_size <= 3:
+            # guard refusal / cutjoin_kernel=False under a mesh: the f64
+            # dense join still shards (pure XLA, no chunking, no guard)
+            from repro.distributed import cutjoin as dcj
+            self._annotate(route="xla-sharded", mesh_axes=["data"],
+                           num_shards=shards)
+            return dcj.sharded_dense_join(Ms, node.cut_size,
+                                          mesh=self.mesh)
+        if shards > 1:
+            obs.counter("cutjoin.shard_fallbacks", reason="wide-cut")
+            self._annotate(shard_fallback="wide-cut")
+        self._annotate(route="xla-dense")
         with self.counter._x64():
             return float(_join_reduce(jnp.stack([jnp.asarray(M)
                                                  for M in Ms])))
@@ -443,7 +488,21 @@ class CompiledPlan:
         if self.cutjoin_kernel:
             from repro.kernels import ops
             block = self._guard_block(node, Ms, axes)
-            if block is not None:            # f32 chunks provably exact
+            shards = self._mesh_shards()
+            if block is not None and shards > 1:
+                from repro.distributed import cutjoin as dcj
+                self._annotate(route="kernel-sharded-keep",
+                               mesh_axes=["data"], num_shards=shards)
+                if node.cut_size == 2:
+                    out = dcj.sharded_cutjoin_keep(Ms, keep=axis,
+                                                   mesh=self.mesh,
+                                                   block=block)
+                else:
+                    out = dcj.sharded_cutjoin3_keep(Ms, axes, keep=axis,
+                                                    n=self.graph.n,
+                                                    mesh=self.mesh,
+                                                    block=block)
+            elif block is not None:          # f32 chunks provably exact
                 self._annotate(route="kernel-keep")
                 if node.cut_size == 2:
                     out = ops.cutjoin_reduce_keep(Ms, keep=axis,
@@ -455,6 +514,12 @@ class CompiledPlan:
             else:
                 obs.counter("cutjoin.kernel_fallbacks", cut=node.cut_size,
                             keep=True)
+                if shards > 1:
+                    # no sharded dense keep-axis route: guard refusal
+                    # under a mesh lands on the single-device XLA oracle
+                    obs.counter("cutjoin.shard_fallbacks",
+                                reason="guard-refusal")
+                    self._annotate(shard_fallback="guard-refusal")
         if out is None:
             self._annotate(route="xla-keep")
             dense = self._dense_expand(Ms, axes, node.cut_size)
@@ -503,12 +568,15 @@ class CompiledPlan:
 
 def lower(plan: Plan, graph: Graph, *, counter=None, use_pallas=False,
           from_cache=False, budget: int = 1 << 27,
-          cutjoin_kernel: bool = True, verify: bool = False) -> CompiledPlan:
+          cutjoin_kernel: bool = True, verify: bool = False,
+          mesh=None) -> CompiledPlan:
     """Bind a plan to a graph.  ``verify=True`` runs the static
     verifier against this graph first and raises ``PlanVerifyError``
     instead of binding a malformed plan — for plans that arrived from
     outside ``compiler.compile`` (hand-built, deserialized, mutated),
-    which already verifies what it commits."""
+    which already verifies what it commits.  ``mesh`` (a 1-D
+    ``("data",)`` jax Mesh) routes guarded joins through the sharded
+    tier — numerically identical, see ``distributed/cutjoin.py``."""
     if verify:
         from repro import analysis
         analysis.verify(
@@ -516,4 +584,4 @@ def lower(plan: Plan, graph: Graph, *, counter=None, use_pallas=False,
             budget=budget).raise_if_failed()
     return CompiledPlan(plan, graph, counter=counter, use_pallas=use_pallas,
                         from_cache=from_cache, budget=budget,
-                        cutjoin_kernel=cutjoin_kernel)
+                        cutjoin_kernel=cutjoin_kernel, mesh=mesh)

@@ -18,6 +18,7 @@ import threading
 from typing import Optional
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # Baseline logical->mesh rules (single- and multi-pod share names; "pod" is
@@ -146,3 +147,26 @@ def tree_shardings(axes_tree, shapes_tree, mesh=None, rules=None):
 
 def num_chips(mesh: Mesh) -> int:
     return math.prod(mesh.devices.shape)
+
+
+def data_mesh(num_devices: Optional[int] = None) -> Mesh:
+    """1-D ``("data",)`` mesh over the first ``num_devices`` local
+    devices — the execution mesh of the GPM join tier
+    (``distributed/cutjoin.py``).  Distinct from
+    ``launch.mesh.make_host_mesh``, whose ``("data", "model")`` grid
+    puts every device on the *model* axis: the join tier shards the cut
+    grid (and fans request batches) over ``data`` only."""
+    devs = jax.devices()
+    if num_devices is not None:
+        assert 1 <= num_devices <= len(devs), (num_devices, len(devs))
+        devs = devs[:num_devices]
+    return Mesh(np.asarray(devs), ("data",))
+
+
+def num_shards(mesh: Optional[Mesh], axis: str = "data") -> int:
+    """Size of ``axis`` in ``mesh`` — 1 when the mesh is absent or does
+    not carry the axis, so callers can treat "no mesh" and "trivial
+    mesh" uniformly."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(axis, 1))

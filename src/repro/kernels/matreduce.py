@@ -57,6 +57,16 @@ Two primitives live here:
 Both primitives zero-pad their inputs up to the tile multiple, so any
 ``n`` works; padding is value-preserving because padded mask / factor
 entries are zero and the reduction is a sum.
+
+**Global index offsets.**  Every masked kernel takes a small int32
+``offsets`` vector (one entry per grid axis, default zeros) that is
+added to the tile iotas before the injectivity comparison: a caller
+holding only a *slice* of the factor tensors — one device's block of
+cut axis 0 under the mesh tier (``distributed/cutjoin.py``) — passes
+its global start index so ``rows == cols`` still compares global cut
+vertices, not slice-local positions.  Offsets ride as a tiny array
+input (they may be traced values, e.g. ``axis_index * block`` inside
+``shard_map``), replicated to every tile by its BlockSpec.
 """
 from __future__ import annotations
 
@@ -133,18 +143,21 @@ def matreduce(lhs, rhs, mask, *, bm: int = 128, bn: int = 128,
 
 # -- prod_reduce: Σ over (injective) index tuples of Π_i F_i ----------------------
 
-def _pairjoin_kernel(stack_ref, out_ref, *, nf, masked, bm, bn):
+def _pairjoin_kernel(stack_ref, off_ref, out_ref, *, nf, masked, bm, bn):
     """One (bm, bn) tile of Σ [x≠y] · Π_i F_i[x, y]: product over the
-    factor axis, injectivity mask from tile indices, one row of per-
-    column f32 partials (each bounded by max|Π F| · bm — finer chunks
-    than a per-tile scalar, so large tiles stay exact on integers)."""
+    factor axis, injectivity mask from tile indices (offset to global
+    coordinates), one row of per-column f32 partials (each bounded by
+    max|Π F| · bm — finer chunks than a per-tile scalar, so large tiles
+    stay exact on integers)."""
     i, j = pl.program_id(0), pl.program_id(1)
     prod = stack_ref[0, ...]
     for f in range(1, nf):
         prod = prod * stack_ref[f, ...]
     if masked:
-        rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
-        cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) \
+            + i * bm + off_ref[0]
+        cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) \
+            + j * bn + off_ref[1]
         prod = jnp.where(rows == cols, jnp.float32(0.0), prod)
     out_ref[0, :] = jnp.sum(prod, axis=0)
 
@@ -159,7 +172,7 @@ def _vecjoin_kernel(stack_ref, out_ref, *, nf):
 
 @functools.partial(jax.jit,
                    static_argnames=("distinct", "bm", "bn", "interpret"))
-def _pairjoin_tiles(stack, *, distinct, bm, bn, interpret):
+def _pairjoin_tiles(stack, offsets, *, distinct, bm, bn, interpret):
     k, M, N = stack.shape
     grid = (M // bm, N // bn)
     kern = functools.partial(_pairjoin_kernel, nf=k, masked=distinct,
@@ -167,11 +180,12 @@ def _pairjoin_tiles(stack, *, distinct, bm, bn, interpret):
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[pl.BlockSpec((k, bm, bn), lambda i, j: (0, i, j))],
+        in_specs=[pl.BlockSpec((k, bm, bn), lambda i, j: (0, i, j)),
+                  pl.BlockSpec((2,), lambda i, j: (0,))],
         out_specs=pl.BlockSpec((1, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((grid[0], N), jnp.float32),
         interpret=interpret,
-    )(stack)
+    )(stack, offsets)
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
@@ -188,7 +202,8 @@ def _vecjoin_tiles(stack, *, bn, interpret):
     )(stack)
 
 
-def _pairjoin_keep_kernel(stack_ref, out_ref, *, nf, masked, bm, bn):
+def _pairjoin_keep_kernel(stack_ref, off_ref, out_ref, *, nf, masked,
+                          bm, bn):
     """One (bm, bn) tile of the keep-axis join: per-row partials
     out[x] = Σ_y [x≠y] · Π_i F_i[x, y] over this tile's columns.  Each
     partial accumulates bn cells — the same chunk bound ``exact_block``
@@ -198,15 +213,17 @@ def _pairjoin_keep_kernel(stack_ref, out_ref, *, nf, masked, bm, bn):
     for f in range(1, nf):
         prod = prod * stack_ref[f, ...]
     if masked:
-        rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) + i * bm
-        cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) + j * bn
+        rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) \
+            + i * bm + off_ref[0]
+        cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) \
+            + j * bn + off_ref[1]
         prod = jnp.where(rows == cols, jnp.float32(0.0), prod)
     out_ref[:, 0] = jnp.sum(prod, axis=1)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("distinct", "bm", "bn", "interpret"))
-def _pairjoin_keep_tiles(stack, *, distinct, bm, bn, interpret):
+def _pairjoin_keep_tiles(stack, offsets, *, distinct, bm, bn, interpret):
     k, M, N = stack.shape
     grid = (M // bm, N // bn)
     kern = functools.partial(_pairjoin_keep_kernel, nf=k, masked=distinct,
@@ -214,16 +231,29 @@ def _pairjoin_keep_tiles(stack, *, distinct, bm, bn, interpret):
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[pl.BlockSpec((k, bm, bn), lambda i, j: (0, i, j))],
+        in_specs=[pl.BlockSpec((k, bm, bn), lambda i, j: (0, i, j)),
+                  pl.BlockSpec((2,), lambda i, j: (0,))],
         out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, grid[1]), jnp.float32),
         interpret=interpret,
-    )(stack)
+    )(stack, offsets)
+
+
+def _offsets_or_zero(offsets, naxes: int):
+    """Normalise a per-axis global-offset vector (None -> zeros).  The
+    entries may be traced (``shard_map`` passes ``axis_index``-derived
+    starts), so everything downstream treats this as array data."""
+    if offsets is None:
+        return jnp.zeros((naxes,), jnp.int32)
+    off = jnp.asarray(offsets, jnp.int32)
+    assert off.shape == (naxes,), (off.shape, naxes)
+    return off
 
 
 def prod_reduce_keep(factors, *, keep: int = 0, distinct: bool = True,
                      bm: int = 128, bn: int = 128,
-                     interpret: bool = False) -> np.ndarray:
+                     interpret: bool = False,
+                     offsets=None) -> np.ndarray:
     """Keep-axis masked product-reduce over (n, n) factors:
 
         keep=0:  out[x] = Σ_y [x≠y] · Π_i F_i[x, y]
@@ -239,17 +269,22 @@ def prod_reduce_keep(factors, *, keep: int = 0, distinct: bool = True,
     partials are summed across column tiles on the host in f64 — exact
     for integer factors while each bn-cell partial stays below 2^24,
     which ``exact_block`` certifies (the guard is identical: both
-    kernels chunk the same per-partial cell count).
+    kernels chunk the same per-partial cell count).  ``offsets`` gives
+    the factors' global start index per *original* cut axis (sliced
+    callers only — see the module docstring); the swap below reorders
+    it alongside the axes.
     """
     stack = jnp.stack([jnp.asarray(F, jnp.float32) for F in factors])
-    assert stack.ndim == 3 and stack.shape[1] == stack.shape[2]
+    assert stack.ndim == 3        # rectangular slices legal (sharded rows)
     assert keep in (0, 1)
+    off = _offsets_or_zero(offsets, 2)
     if keep == 1:
         stack = jnp.swapaxes(stack, 1, 2)    # same kernel, rows <-> cols
+        off = off[::-1]
     n = stack.shape[1]
-    b = min(bm, bn, max(n, 1))
+    b = min(bm, bn, max(min(n, stack.shape[2]), 1))
     stack = _pad_to(stack, (1, b, b))
-    tiles = _pairjoin_keep_tiles(stack, distinct=distinct, bm=b, bn=b,
+    tiles = _pairjoin_keep_tiles(stack, off, distinct=distinct, bm=b, bn=b,
                                  interpret=interpret)
     return np.asarray(tiles, np.float64).sum(axis=1)[:n]
 
@@ -260,19 +295,24 @@ def _trijoin_kernel(*refs, nf, masked, bm, bn, bk):
     """One (bm, bn, bk) tile of Σ [x,y,z pairwise distinct] · Π_i F_i.
     Factor tiles carry size-1 dims on absent axes and broadcast against
     the full tile shape (never expanded in memory); the pairwise-
-    distinct mask is three tile-iota comparisons.  The tile writes a
-    (bm, bn) sheet of f32 partials, each accumulating bk cells — the
-    chunk bound ``exact_block`` certifies."""
+    distinct mask is three tile-iota comparisons, each offset to global
+    coordinates.  The tile writes a (bm, bn) sheet of f32 partials,
+    each accumulating bk cells — the chunk bound ``exact_block``
+    certifies."""
     out_ref = refs[-1]
+    off_ref = refs[-2]
     prod = refs[0][...]
     for f in range(1, nf):
         prod = prod * refs[f][...]
     if masked:
         i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
         shape = (bm, bn, bk)
-        x = jax.lax.broadcasted_iota(jnp.int32, shape, 0) + i * bm
-        y = jax.lax.broadcasted_iota(jnp.int32, shape, 1) + j * bn
-        z = jax.lax.broadcasted_iota(jnp.int32, shape, 2) + k * bk
+        x = jax.lax.broadcasted_iota(jnp.int32, shape, 0) + i * bm \
+            + off_ref[0]
+        y = jax.lax.broadcasted_iota(jnp.int32, shape, 1) + j * bn \
+            + off_ref[1]
+        z = jax.lax.broadcasted_iota(jnp.int32, shape, 2) + k * bk \
+            + off_ref[2]
         bad = (x == y) | (x == z) | (y == z)
         prod = jnp.where(bad, jnp.float32(0.0), prod)
     else:
@@ -283,7 +323,8 @@ def _trijoin_kernel(*refs, nf, masked, bm, bn, bk):
 @functools.partial(jax.jit,
                    static_argnames=("present", "distinct", "bm", "bn",
                                     "bk", "interpret"))
-def _trijoin_tiles(*stack, present, distinct, bm, bn, bk, interpret):
+def _trijoin_tiles(*stack, offsets, present, distinct, bm, bn, bk,
+                   interpret):
     """``stack``: one 3-D array per factor, shape (M|1, N|1, K|1) with
     size-1 dims on the axes ``present[f]`` misses.  Returns the (M, N,
     gk) f32 partial tensor (gk = K // bk column-tile partials)."""
@@ -305,11 +346,12 @@ def _trijoin_tiles(*stack, present, distinct, bm, bn, bk, interpret):
     return pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[spec(axes) for axes in present],
+        in_specs=[spec(axes) for axes in present] +
+                 [pl.BlockSpec((3,), lambda i, j, k: (0,))],
         out_specs=pl.BlockSpec((bm, bn, 1), lambda i, j, k: (i, j, k)),
         out_shape=jax.ShapeDtypeStruct((M, N, grid[2]), jnp.float32),
         interpret=interpret,
-    )(*stack)
+    )(*stack, offsets)
 
 
 def _tri_normalise(factors, axes, n: int, b: int):
@@ -342,7 +384,7 @@ def _tri_normalise(factors, axes, n: int, b: int):
 
 def tri_reduce(factors, axes, *, n: int, distinct: bool = True,
                bm: int = 128, bn: int = 128, bk: int = 128,
-               interpret: bool = False) -> float:
+               interpret: bool = False, offsets=None) -> float:
     """Σ over (pairwise-distinct) index triples of Π_i F_i, where factor
     i spans only the cut axes ``axes[i]`` (a sorted subset of (0, 1, 2))
     and broadcasts along the rest.
@@ -353,24 +395,28 @@ def tri_reduce(factors, axes, *, n: int, distinct: bool = True,
     factors stay at their own size.  Per-tile (bm, bn) f32 partials each
     accumulate bk cells, so ``exact_block`` certifies the same chunk
     bound as the pair tier with b = bk; the host reduces the partial
-    tensor in f64."""
+    tensor in f64.  ``offsets`` gives the factors' global start index
+    per cut axis (sliced callers only)."""
     b = min(bm, bn, bk, max(n, 1))
     stacked, present = _tri_normalise(factors, axes, n, b)
-    tiles = _trijoin_tiles(*stacked, present=present, distinct=distinct,
+    tiles = _trijoin_tiles(*stacked, offsets=_offsets_or_zero(offsets, 3),
+                           present=present, distinct=distinct,
                            bm=b, bn=b, bk=b, interpret=interpret)
     return float(np.asarray(tiles, np.float64).sum())
 
 
 def tri_reduce_keep(factors, axes, *, keep: int, n: int,
                     distinct: bool = True, bm: int = 128, bn: int = 128,
-                    bk: int = 128,
-                    interpret: bool = False) -> np.ndarray:
+                    bk: int = 128, interpret: bool = False,
+                    offsets=None) -> np.ndarray:
     """Keep-axis tri-join: out[w] = Σ over the other two (pairwise-
     distinct) axes of Π_i F_i — the anchored partial-embedding vector of
     a |cut| = 3 plan.  ``keep`` picks the surviving axis; factors are
     transposed host-side so it leads (free for axis-subset factors —
     only their axis labels move), then the same kernel runs and the
-    host sums the non-kept partial axes per row in f64."""
+    host sums the non-kept partial axes per row in f64.  ``offsets``
+    gives the factors' global start index per *original* cut axis; the
+    permutation below reorders it alongside the axes."""
     assert keep in (0, 1, 2)
     perm = (keep,) + tuple(a for a in range(3) if a != keep)
     rank = {a: i for i, a in enumerate(perm)}
@@ -383,10 +429,12 @@ def tri_reduce_keep(factors, axes, *, keep: int, n: int,
         pfactors.append(np.transpose(np.asarray(F), order)
                         if order != tuple(range(len(ax))) else F)
         paxes.append(new)
+    off = _offsets_or_zero(offsets, 3)[jnp.asarray(perm)]
     b = min(bm, bn, bk, max(n, 1))
     stacked, present = _tri_normalise(pfactors, paxes, n, b)
-    tiles = _trijoin_tiles(*stacked, present=present, distinct=distinct,
-                           bm=b, bn=b, bk=b, interpret=interpret)
+    tiles = _trijoin_tiles(*stacked, offsets=off, present=present,
+                           distinct=distinct, bm=b, bn=b, bk=b,
+                           interpret=interpret)
     return np.asarray(tiles, np.float64).sum(axis=(1, 2))[:n]
 
 
@@ -420,7 +468,8 @@ def exact_block(factors, max_block: int = 1024, min_block: int = 8,
 
 
 def prod_reduce(factors, *, distinct: bool = True, bm: int = 128,
-                bn: int = 128, interpret: bool = False) -> float:
+                bn: int = 128, interpret: bool = False,
+                offsets=None) -> float:
     """Σ over index tuples of Π_i F_i, factors all (n,) or all (n, n).
 
     ``distinct`` (2-D only) restricts the sum to off-diagonal cells —
@@ -430,7 +479,9 @@ def prod_reduce(factors, *, distinct: bool = True, bm: int = 128,
     the tile multiple; chunked f32 partials (per-column for 2-D tiles)
     are reduced on the host in f64 — exact for integer-valued factors
     while each chunk partial stays below 2^24, which ``exact_block``
-    certifies for a given factor set.
+    certifies for a given factor set.  ``offsets`` gives the factors'
+    global start index per cut axis (sliced callers only; the 1-D fast
+    path has no mask, so it ignores them).
     """
     stack = jnp.stack([jnp.asarray(F, jnp.float32) for F in factors])
     if stack.ndim == 2:                      # |cut| = 1: vector fast path
@@ -439,10 +490,13 @@ def prod_reduce(factors, *, distinct: bool = True, bm: int = 128,
         tiles = _vecjoin_tiles(stack, bn=min(bn, stack.shape[1]),
                                interpret=interpret)
     else:
-        assert stack.ndim == 3 and stack.shape[1] == stack.shape[2]
-        M = stack.shape[1]
-        b = min(bm, bn, max(M, 1))
+        # rectangular (m, n) slices are legal: a sharded caller holds one
+        # device's rows of cut axis 0 and passes their global offset
+        assert stack.ndim == 3
+        M, N = stack.shape[1], stack.shape[2]
+        b = min(bm, bn, max(min(M, N), 1))
         stack = _pad_to(stack, (1, b, b))
-        tiles = _pairjoin_tiles(stack, distinct=distinct, bm=b, bn=b,
+        tiles = _pairjoin_tiles(stack, _offsets_or_zero(offsets, 2),
+                                distinct=distinct, bm=b, bn=b,
                                 interpret=interpret)
     return float(np.asarray(tiles, np.float64).sum())

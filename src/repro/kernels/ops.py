@@ -63,7 +63,7 @@ def triangle_count(adj, *, interpret=None):
 
 
 def cutjoin_reduce(factors, *, distinct=True, bm=None, bn=None,
-                   interpret=None) -> float:
+                   interpret=None, offsets=None) -> float:
     """The decomposition join Σ_{e_c} Π_i M_i(e_c) as a fused kernel.
 
     ``factors`` is a sequence of equal-shape cut tensors: (n,) vectors for
@@ -71,7 +71,9 @@ def cutjoin_reduce(factors, *, distinct=True, bm=None, bn=None,
     (n, n) matrices for |cut| = 2, where ``distinct`` applies the
     off-diagonal injectivity mask in-kernel from tile indices.  Arbitrary
     ``n`` works (zero-padding to the tile multiple); the result is the
-    f64 host-side sum of per-tile f32 partials.
+    f64 host-side sum of per-tile f32 partials.  ``offsets`` gives the
+    factors' global start index per cut axis when the caller holds only
+    a slice (the mesh tier — see ``distributed/cutjoin.py``).
 
     Default tiles: 128 on TPU (MXU-aligned, VMEM-sized) but 1024 in
     interpret mode, where per-grid-step dispatch dominates and VMEM is
@@ -86,11 +88,12 @@ def cutjoin_reduce(factors, *, distinct=True, bm=None, bn=None,
     obs.counter("kernel.calls", op="cutjoin_reduce",
                 cut=2 if getattr(factors[0], "ndim", 2) == 2 else 1)
     return _mr.prod_reduce(factors, distinct=distinct, bm=bm, bn=bn,
-                           interpret=interpret)
+                           interpret=interpret, offsets=offsets)
 
 
 def cutjoin_reduce_keep(factors, *, keep=0, distinct=True, bm=None,
-                        bn=None, interpret=None) -> np.ndarray:
+                        bn=None, interpret=None,
+                        offsets=None) -> np.ndarray:
     """Keep-axis decomposition join: out[x] = Σ_{y≠x} Π_i M_i(x, y) over
     (n, n) cut tensors — the anchored partial-embedding vector of a
     |cut| = 2 plan (``keep`` picks which cut axis survives).  Same
@@ -105,11 +108,12 @@ def cutjoin_reduce_keep(factors, *, keep=0, distinct=True, bm=None,
         bn = bm
     obs.counter("kernel.calls", op="cutjoin_reduce_keep", cut=2)
     return _mr.prod_reduce_keep(factors, keep=keep, distinct=distinct,
-                                bm=bm, bn=bn, interpret=interpret)
+                                bm=bm, bn=bn, interpret=interpret,
+                                offsets=offsets)
 
 
 def cutjoin_reduce3(factors, axes, *, n, distinct=True, block=None,
-                    interpret=None) -> float:
+                    interpret=None, offsets=None) -> float:
     """The |cut| = 3 decomposition join Σ_{e_c pairwise distinct} Π_i
     M_i(e_c) as a tiled tri-join kernel.
 
@@ -128,11 +132,13 @@ def cutjoin_reduce3(factors, axes, *, n, distinct=True, block=None,
     b = min(block, 128) if not interpret else block
     obs.counter("kernel.calls", op="cutjoin_reduce3", cut=3)
     return _mr.tri_reduce(factors, axes, n=n, distinct=distinct,
-                          bm=b, bn=b, bk=b, interpret=interpret)
+                          bm=b, bn=b, bk=b, interpret=interpret,
+                          offsets=offsets)
 
 
 def cutjoin_reduce3_keep(factors, axes, *, keep, n, distinct=True,
-                         block=None, interpret=None) -> np.ndarray:
+                         block=None, interpret=None,
+                         offsets=None) -> np.ndarray:
     """Keep-axis |cut| = 3 join: out[w] = Σ over the two non-kept cut
     axes (pairwise-distinct triples only) of Π_i M_i — the anchored
     partial-embedding vector of a 3-cut plan.  Same axis-subset
@@ -145,7 +151,7 @@ def cutjoin_reduce3_keep(factors, axes, *, keep, n, distinct=True,
     obs.counter("kernel.calls", op="cutjoin_reduce3_keep", cut=3)
     return _mr.tri_reduce_keep(factors, axes, keep=keep, n=n,
                                distinct=distinct, bm=b, bn=b, bk=b,
-                               interpret=interpret)
+                               interpret=interpret, offsets=offsets)
 
 
 def runtime_block(block: int, *, interpret=None) -> int:

@@ -84,7 +84,18 @@ def main(argv=None):
     ap.add_argument("--metrics", action="store_true",
                     help="print the process metrics registry "
                     "(counters/gauges/histograms) after the run")
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="shard compiled-plan joins over the first N "
+                    "devices (1-D data mesh; CutJoin/LocalCount routes "
+                    "split their cut grid, results stay bit-for-bit "
+                    "equal to single-device)")
     args = ap.parse_args(argv)
+
+    mesh = None
+    if args.mesh is not None and args.mesh > 1:
+        from repro.distributed import meshes
+        mesh = meshes.data_mesh(args.mesh)
+        print(f"mesh: {args.mesh} device(s) on axis 'data'")
 
     tracer = None
     if args.trace:
@@ -131,7 +142,7 @@ def main(argv=None):
             table = eng.counter.motif_table(args.k, cuts=cuts)
         else:
             from repro import compiler
-            cp = compiler.compile(pats, g, cache=plan_cache)
+            cp = compiler.compile(pats, g, cache=plan_cache, mesh=mesh)
             cp.tracer = tracer
             t_compile = time.perf_counter() - t0
             e = {p: cp.count(p) for p in pats}
@@ -157,7 +168,7 @@ def main(argv=None):
         else:
             from repro import compiler
             cp = compiler.compile(p, g, cache=plan_cache,
-                                  local=args.local_counts)
+                                  local=args.local_counts, mesh=mesh)
             cp.tracer = tracer
             verify_report(cp)
             c = cp.count(p)

@@ -179,13 +179,23 @@ class PatternQueryBatcher:
     """
 
     def __init__(self, graph, *, cache=None, apct=None, max_batch: int = 8,
-                 verify_plans: bool = True):
+                 verify_plans: bool = True, mesh=None):
         from repro.compiler import PlanCache
         from repro.core.counting import CountingEngine
         self.graph = graph
         self.cache = cache if cache is not None else PlanCache()
         self.apct = apct
         self.max_batch = max_batch
+        # layer-1 mesh execution: plans compile against the mesh (their
+        # CutJoin/LocalCount routes shard over it) and each step's
+        # requests fan out round-robin over the mesh's device slots —
+        # concurrent queries stop queueing behind one device.  None
+        # keeps the single-device serving loop bit-for-bit unchanged.
+        self.mesh = mesh
+        self._executor = None
+        if mesh is not None:
+            from repro.distributed.cutjoin import MeshExecutor
+            self._executor = MeshExecutor(mesh)
         # statically verify every plan this batcher compiles (and, via
         # the cache's own verify pass, every plan it loads from disk) —
         # a malformed plan becomes a compile-phase fallback, never a
@@ -230,7 +240,7 @@ class PatternQueryBatcher:
             cp = compiler.compile(patterns, self.graph, apct=self.apct,
                                   counter=self.counter, cache=self.cache,
                                   domains=domains, local=local,
-                                  verify=self.verify_plans)
+                                  verify=self.verify_plans, mesh=self.mesh)
         except Exception:
             return None
         self.stats["cache_hits" if cp.from_cache else "compiles"] += 1
@@ -326,8 +336,11 @@ class PatternQueryBatcher:
                  req.local or req.top_k is not None), []).append(req)
         for (sig, support, local), reqs in groups.items():
             cp = self._plan_for(sig, reqs[0].patterns, support, local)
-            for req in reqs:
-                self._serve(req, cp)
+            if self._executor is not None and len(reqs) > 1:
+                self._executor.map(lambda req: self._serve(req, cp), reqs)
+            else:
+                for req in reqs:
+                    self._serve(req, cp)
         self.stats["steps"] += 1
         return True
 
