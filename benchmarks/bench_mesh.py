@@ -15,7 +15,11 @@ Two layers, mirroring the tier's design:
   number (>= 3x at 8 devices);
 * layer 2 — one big join: ``sharded_cutjoin`` (factors block-sharded
   over cut axis 0, f32 chunk partials reduced with ``psum``) vs the
-  single-device kernel at n >= 512, counts asserted bit-for-bit equal.
+  single-device kernel at n >= 512, counts asserted bit-for-bit equal;
+* contract — the factor-*building* tier (``distributed/contract``): a
+  free-hom cut tensor contracted from the row-sharded adjacency via
+  collective einsums vs the single-device engine, bit-for-bit asserted,
+  with the sharded engine's lazy dense adjacency asserted never built.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_mesh [--smoke]
 ``--smoke`` runs the tiny CI configuration; either way the rows land in
@@ -124,6 +128,43 @@ def bench_layer2_tri(n: int, repeat: int = 2):
     assert got_1 == got_m, (got_1, got_m)
 
 
+def bench_contract(n: int, repeat: int = 3):
+    """The adjacency-sharded contract regime: a 4-cycle cut tensor
+    (free = (0, 1)) contracted from the row-sharded adjacency via
+    collective einsums vs the single-device dense-adjacency engine.
+    Counts asserted bit-for-bit equal; the sharded engine's lazy dense
+    adjacency asserted never built (no unsharded n x n anywhere)."""
+    from repro.core.counting import CountingEngine
+    from repro.core.pattern import cycle
+    from repro.graph.generators import erdos_renyi
+
+    mesh = meshes.data_mesh()
+    d = meshes.num_shards(mesh)
+    g = erdos_renyi(n, avg_degree=8.0, seed=7)
+    p, free = cycle(4), (0, 1)
+
+    single = CountingEngine(g)
+    sharded = CountingEngine(g, mesh=mesh)
+
+    def run_single():
+        single.hom_free_memo.clear()
+        return single.hom_free_tensor(p, free)
+
+    def run_sharded():
+        sharded.hom_free_memo.clear()
+        return np.asarray(sharded.hom_free_tensor(p, free))
+
+    dt_1, got_1 = timeit(run_single, repeat=repeat, warmup=True)
+    emit(f"mesh/contract-single/n={n}", dt_1 * 1e6)
+    dt_m, got_m = timeit(run_sharded, repeat=repeat, warmup=True)
+    emit(f"mesh/contract-sharded/n={n}/d={d}", dt_m * 1e6,
+         f"vs_single={dt_1 / max(dt_m, 1e-12):.2f}x")
+    assert np.array_equal(np.asarray(got_1), got_m), \
+        "sharded contraction diverged"
+    assert sharded._A_dense is None, \
+        "sharded engine materialised the dense adjacency"
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -131,13 +172,14 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.smoke:
-        batch, bn, join_n, tri_n = 64, 64, 512, 160
+        batch, bn, join_n, tri_n, con_n = 64, 64, 512, 160, 192
     else:
-        batch, bn, join_n, tri_n = 128, 96, 1024, 256
+        batch, bn, join_n, tri_n, con_n = 128, 96, 1024, 256, 512
 
     scaling = bench_layer1(batch, bn)
     bench_layer2(join_n, cut=2)
     bench_layer2_tri(tri_n)
+    bench_contract(con_n)
     path = save_json("mesh")
     if scaling < 3.0:
         print(f"WARNING: layer-1 scaling {scaling:.1f}x below the 3x "

@@ -2,8 +2,14 @@
 
     PYTHONPATH=src python examples/mesh_mining.py
 
-Two layers ride the same 1-D ``("data",)`` mesh:
+Three layers ride the same 1-D ``("data",)`` mesh:
 
+* sharded adjacency — an engine bound with ``mesh=`` keeps the graph's
+  adjacency *row-sharded* across the devices
+  (``repro.distributed.contract``): Contract nodes run as collective
+  einsums (local slice contraction + ``psum``), the dense n x n
+  adjacency never materialises anywhere, and the cut tensors a join
+  consumes are born already sliced along cut axis 0;
 * block-sharded joins — a plan compiled with ``mesh=`` routes its
   CutJoin/LocalCount nodes through ``repro.distributed.cutjoin``: every
   factor is sliced along cut axis 0, each device reduces its block rows
@@ -38,10 +44,18 @@ graph = erdos_renyi(400, 8.0, seed=1)
 mesh = meshes.data_mesh()                 # all local devices on "data"
 print(f"graph: {graph}; mesh: {meshes.num_shards(mesh)} device(s)")
 
-# --- layer 2: one plan, joins block-sharded over the mesh -----------------
+# --- layer 3: the adjacency itself sharded over the mesh ------------------
+shard_engine = CountingEngine(graph, mesh=mesh)   # adjacency row-sharded
+t = shard_engine.hom_free_tensor(cycle(4), free=(0, 1))
+assert shard_engine._A_dense is None      # no unsharded n x n, ever
+print(f"C4 cut tensor contracted sharded: shape {tuple(t.shape)}, "
+      f"sharding {t.sharding.spec} (n divisible by the mesh -> the "
+      f"tensor stays sliced on cut axis 0)")
+
+# --- layer 2: one plan, contractions + joins sharded over the mesh --------
 patterns = motif_patterns(4)
 tracer = obs.Tracer()
-cp = compiler.compile(patterns, graph, counter=CountingEngine(graph),
+cp = compiler.compile(patterns, graph, counter=shard_engine,
                       cache=False, mesh=mesh)
 cp.tracer = tracer
 single = compiler.compile(patterns, graph, counter=CountingEngine(graph),

@@ -40,6 +40,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.compiler.ir import (Contract, CutJoin, Intersect, LocalCount,
                                MobiusCombine, Plan, ShrinkageCorrect,
                                is_local_output)
+from repro.core import homomorphism as _H
 from repro.core.pattern import LABEL_STRIDE, free_skeleton
 from repro.kernels.matreduce import EXACT_LIMIT
 from repro.kernels import matreduce as _mr
@@ -632,7 +633,14 @@ def shard_check(plan: Plan, info: GraphInfo, num_shards: int, *,
                                elements (axis-0 carriers at n/shards
                                rows, the rest replicated) still exceed
                                4x budget — sharding did not buy the
-                               memory headroom the budget models.
+                               memory headroom the budget models.  The
+                               same code covers Contract nodes on the
+                               collective-einsum route
+                               (``distributed/contract``): per-shard
+                               residency there is the adjacency row
+                               block plus the widest post-psum
+                               *replicated* intermediate plus the
+                               free-output row slice.
 
     All warnings: none makes a sharded execution incorrect — per-shard
     blocks stay certified (see ``precertify``) and padding preserves
@@ -670,6 +678,33 @@ def shard_check(plan: Plan, info: GraphInfo, num_shards: int, *,
                     f"per-shard factor residency {elems:.3e} elements "
                     f"still over 4x budget ({cap:.3e}) at "
                     f"{num_shards} shards"))
+        # Contract nodes on the collective-einsum route: each shard
+        # holds its adjacency row block, every elimination step's
+        # intermediate comes back *replicated* from the psum (only the
+        # free-output step stays sharded), so the widest replicated
+        # intermediate dominates per-shard residency alongside the row
+        # block and the output row slice.
+        for key, node in plan.nodes.items():
+            if not isinstance(node, Contract):
+                continue
+            free = tuple(node.free)
+            q = free_skeleton(node.pattern) if free else node.pattern
+            order = tuple(node.order) if node.order else \
+                _H.greedy_plan(q, free)
+            try:
+                widths = _H.elimination_widths(q, order, free=free)
+            except Exception:
+                continue              # malformed order — verify() flags it
+            inter = max((n ** w for _, w in widths), default=1)
+            out_slice = rows * n ** (len(free) - 1) if free else 1
+            elems = rows * n + inter + out_slice
+            if elems > cap:
+                res.diagnostics.append(_warn(
+                    "shard-budget-overflow", key,
+                    f"per-shard contraction residency {elems:.3e} "
+                    f"elements (row block + widest replicated "
+                    f"intermediate) still over 4x budget ({cap:.3e}) "
+                    f"at {num_shards} shards"))
     return res
 
 

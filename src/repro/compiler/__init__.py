@@ -44,12 +44,12 @@ from repro.core.pattern import Pattern
 from repro.graph.storage import Graph
 from repro.compiler import cache as _cache_mod
 from repro.compiler import costing, frontend
-from repro.compiler.cache import PlanCache, plan_key
+from repro.compiler.cache import PlanCache, config_compatible, plan_key
 from repro.compiler.ir import Plan, local_key, pattern_key
 from repro.compiler.lowering import CompiledPlan, lower
 
 __all__ = ["compile", "Plan", "PlanCache", "CompiledPlan", "pattern_key",
-           "plan_key", "local_key", "default_cache"]
+           "plan_key", "local_key", "default_cache", "config_compatible"]
 
 _DEFAULT_CACHE = PlanCache()
 
@@ -199,12 +199,19 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
     metrics registry (``analysis.always_refused``).
 
     ``mesh`` (a 1-D ``("data",)`` jax Mesh, e.g. ``meshes.data_mesh()``)
-    binds the plan to the sharded join tier: guarded CutJoin/LocalCount
-    nodes execute block-sharded over cut axis 0 (bit-for-bit identical
-    — see ``distributed/cutjoin.py``), and plan selection prices joins
-    per-device with a collective surcharge (``costing``, ``devices=``).
-    The mesh does not enter the cache key: a cached plan selected
-    without a mesh is still numerically valid on one, and vice versa.
+    binds the plan to the sharded tier end to end: Contract nodes lower
+    to collective einsums over the row-sharded adjacency
+    (``distributed/contract.py`` — the n x n adjacency never
+    materialises unsharded), guarded CutJoin/LocalCount nodes execute
+    block-sharded over cut axis 0 (``distributed/cutjoin.py``), all
+    bit-for-bit identical to single-device, and plan selection prices
+    contractions and joins per-device with a collective surcharge
+    (``costing``, ``devices=``).  The mesh does not enter the cache
+    *key*, but its device count is part of the cross-config
+    compatibility check on a hit (``cache.config_compatible``): a plan
+    compiled against a mesh carries sharded route annotations and
+    per-device cost estimates a meshless executor can't honour (and
+    vice versa), so mismatched lookups recompile instead of serving it.
     """
     if isinstance(patterns, Pattern):
         patterns = (patterns,)
@@ -217,17 +224,21 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
     use_cache = cache is not False
     if cache is None:
         cache = _DEFAULT_CACHE
+    from repro.distributed import meshes as _meshes
+    mesh_devices = _meshes.num_shards(mesh)
     key = plan_key(patterns, graph)
     if use_cache:
         plan = cache.get(key)
         # a stored plan is only valid under the compile configuration
-        # that selected it: candidate eligibility depends on budget and
-        # max_cutjoin_cut, so a cross-config hit could return a plan the
-        # executor must refuse (PlanTooWide) — recompile instead.  A
-        # domains=True request needs the domain nodes present; a plan
+        # that selected it — budget, max_cutjoin_cut, and the execution
+        # mesh's device count (see cache.config_compatible); a
+        # cross-config hit recompiles instead of serving a plan the
+        # executor must refuse or whose sharded routes it can't honour.
+        # A domains=True request needs the domain nodes present; a plan
         # that has them serves domain-less requests unchanged.
-        if plan is not None and plan.meta.get("budget") == budget \
-                and plan.meta.get("max_cutjoin_cut") == max_cutjoin_cut:
+        if plan is not None and config_compatible(
+                plan, budget=budget, max_cutjoin_cut=max_cutjoin_cut,
+                mesh_devices=mesh_devices):
             if (not domains or plan.meta.get("domains")) \
                     and (not local or plan.meta.get("local")):
                 return lower(plan, graph, counter=counter,
@@ -250,11 +261,10 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
         max_cutjoin_cut=max_cutjoin_cut)) for p in patterns]
     label_fracs = _label_fracs(patterns, graph)
     node_costs: dict = {}
-    from repro.distributed import meshes as _meshes
     selections, total_cost = costing.select_candidates(
         per_pattern, apct, graph.n, budget, counter=counter,
         label_fracs=label_fracs, node_costs=node_costs,
-        devices=_meshes.num_shards(mesh))
+        devices=mesh_devices)
     plan = frontend.assemble(selections)
     if domains:
         for p in patterns:
@@ -269,6 +279,7 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
         "key": key,
         "budget": budget,
         "max_cutjoin_cut": max_cutjoin_cut,
+        "mesh_devices": mesh_devices,
         "domains": domains,
         "local": local,
         "estimated_cost": total_cost,

@@ -48,6 +48,25 @@ def plan_key(patterns: Iterable[Pattern], graph: Graph) -> str:
     return f"{patterns_signature(patterns)}-{graph_signature(graph)}"
 
 
+def config_compatible(plan: Plan, *, budget: int, max_cutjoin_cut: int,
+                      mesh_devices: int = 1) -> bool:
+    """True when a cached plan was selected under the caller's compile
+    configuration.  A stored plan is only valid under the configuration
+    that selected it: candidate eligibility depends on ``budget`` and
+    ``max_cutjoin_cut`` (a cross-config hit could return a plan the
+    executor must refuse), and route annotations baked at lowering
+    depend on the execution mesh — a plan compiled against an 8-device
+    mesh carries ``einsum-sharded``/``xla-sharded`` routes and per-device
+    cost estimates a meshless executor can't honour, and vice versa, so
+    the mesh *device count* is part of the compatibility check
+    (``mesh_devices``; 1 means no mesh).  Entries written before the
+    field existed default to 1 — compatible with meshless callers only."""
+    meta = plan.meta
+    return (meta.get("budget") == budget
+            and meta.get("max_cutjoin_cut") == max_cutjoin_cut
+            and int(meta.get("mesh_devices", 1)) == int(mesh_devices))
+
+
 class PlanCache:
     """In-memory plan store with optional directory persistence.
 

@@ -100,7 +100,8 @@ def _label_selectivity(labels, label_fracs) -> float:
 
 
 def _contract_cost(node: Contract, apct, n_vertices: int,
-                   budget: int, label_fracs=None) -> float:
+                   budget: int, label_fracs=None,
+                   devices: int = 1) -> float:
     # decode free-hom marker labels back to the real-labelled skeleton;
     # the APCT itself understands only unlabelled skeletons (it strips
     # labels on query), so labelled count bounds are the skeleton
@@ -116,6 +117,13 @@ def _contract_cost(node: Contract, apct, n_vertices: int,
     # holds / chunks); the dense floor charges the *compute* width
     # (output ∪ the eliminated vertex — the volume the einsum streams)
     widths = H.elimination_widths(q, node.order, free=node.free)
+    # devices > 1 prices the collective route (distributed/contract):
+    # each elimination step splits its eliminated-vertex extent across
+    # the mesh, so step work divides by d, plus a log2(d) surcharge per
+    # step for the tree-reduce behind its closing psum — mirroring
+    # _kernel_join_cost so contract vs join selection stays coherent,
+    # and a 1-device mesh prices identically to no mesh.
+    d = max(int(devices), 1)
     total = 0.0
     done = set(node.free)
     for (v, front), (_, width) in zip(steps, widths):
@@ -126,9 +134,11 @@ def _contract_cost(node: Contract, apct, n_vertices: int,
         cnt = (apct.query(sub) if sub.is_connected()
                else CM._disc(apct, q, done))
         cnt *= _label_selectivity(sub.labels, label_fracs)
-        total += cnt + tile_floor(n_vertices, width + 1)
-    # free output tensor materialisation
-    total += tile_floor(n_vertices, len(node.free))
+        total += (cnt + tile_floor(n_vertices, width + 1)) / d
+        if d > 1:
+            total += math.log2(d)
+    # free output tensor materialisation (sharded on cut axis 0)
+    total += tile_floor(n_vertices, len(node.free)) / d
     return total
 
 
@@ -179,7 +189,8 @@ def node_cost(node, apct, n_vertices: int, budget: int = 1 << 27,
     if isinstance(node, Contract):
         if _materialised(node, counter):
             return 0.0
-        return _contract_cost(node, apct, n_vertices, budget, label_fracs)
+        return _contract_cost(node, apct, n_vertices, budget, label_fracs,
+                              devices)
     if isinstance(node, Intersect):
         # ordered enumeration: linear scan + one unit per (approximate)
         # clique tuple

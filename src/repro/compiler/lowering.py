@@ -4,7 +4,14 @@
 evaluates nodes on demand with per-node memoisation:
 
 * ``Contract``   -> ``CountingEngine.hom`` / ``hom_free_tensor`` (bucket
-                    elimination einsums, f64, budget-chunked);
+                    elimination einsums, f64, budget-chunked).  With a
+                    mesh-bound engine the same nodes lower to collective
+                    einsums over the row-sharded adjacency
+                    (``distributed/contract``, route ``einsum-sharded``):
+                    free cut tensors come back already sliced on cut
+                    axis 0 and hand off to the sharded join tier without
+                    a gather, and no unsharded n x n adjacency is ever
+                    materialised;
 * ``Intersect``  -> degeneracy-ordered clique enumeration, or the Pallas
                     ``triangle_count`` kernel when ``use_pallas`` is set
                     (k == 3, f32 MXU path; inputs zero-padded to the tile
@@ -86,13 +93,19 @@ class CompiledPlan:
                  mesh=None):
         self.plan = plan
         self.graph = graph
-        self.counter = counter or CountingEngine(graph, budget=budget)
+        # a default engine inherits the mesh so Contract nodes run their
+        # hom contractions sharded too (a caller-supplied counter keeps
+        # its own binding — pass mesh= to CountingEngine to shard it)
+        self.counter = counter or CountingEngine(graph, budget=budget,
+                                                 mesh=mesh)
         self.use_pallas = use_pallas
         self.cutjoin_kernel = cutjoin_kernel
         self.from_cache = from_cache
-        # execution mesh for the sharded join tier (a 1-D ("data",) jax
-        # Mesh — see distributed/cutjoin.py); None keeps every route
-        # single-device
+        # execution mesh for the sharded tiers (a 1-D ("data",) jax
+        # Mesh): joins block-shard over cut axis 0 (distributed/cutjoin)
+        # and the default engine's hom contractions run as collective
+        # einsums over the row-sharded adjacency (distributed/contract);
+        # None keeps every route single-device
         self.mesh = mesh
         self._values: Dict[str, object] = {}
         self._masks: Dict[int, np.ndarray] = {}
@@ -254,15 +267,25 @@ class CompiledPlan:
 
     def _eval(self, node):
         if isinstance(node, Contract):
+            shards = self.counter.contract_shards()
             if node.free:
                 # decode the marker-encoded pattern: strips cut-rank
                 # markers, restores real vertex labels (label-masked
                 # contraction on labelled patterns)
-                self._annotate(route="einsum-free")
+                if shards > 1:
+                    self._annotate(route="einsum-sharded",
+                                   adjacency="sharded", mesh_axes=["data"],
+                                   num_shards=shards)
+                else:
+                    self._annotate(route="einsum-free")
                 skel = free_skeleton(node.pattern)
                 return self.counter.hom_free_tensor(skel, node.free,
                                                     order=node.order)
-            self._annotate(route="einsum")
+            if shards > 1:
+                self._annotate(route="einsum-sharded", adjacency="sharded",
+                               mesh_axes=["data"], num_shards=shards)
+            else:
+                self._annotate(route="einsum")
             return self.counter.hom(node.pattern, order=node.order or None)
         if isinstance(node, Intersect):
             if self.use_pallas and node.k == 3:
@@ -297,28 +320,49 @@ class CompiledPlan:
         ``exists`` early-exit probes, share them); a single identity
         term returns the node value itself — duplicating every Contract
         tensor into a second (n,)*ndim array would roughly double a
-        long-lived serving plan's steady-state memory."""
+        long-lived serving plan's steady-state memory.  Sharded Contract
+        tensors (jax Arrays sliced over cut axis 0 — see
+        ``CountingEngine.hom_free_tensor``) stay on device: combining in
+        jnp keeps the slices where the sharded join tier reads them, so
+        the factor handoff never gathers."""
         if len(terms) == 1 and terms[0][0] == 1.0:
-            return np.asarray(self.value(terms[0][1]), np.float64)
+            v = self.value(terms[0][1])
+            if isinstance(v, jax.Array):
+                return v
+            return np.asarray(v, np.float64)
         key = (terms, ndim)
         M = self._factors.get(key)
         if M is None:
-            M = np.zeros((self.graph.n,) * ndim)
-            for coeff, ref in terms:
-                M = M + coeff * np.asarray(self.value(ref), np.float64)
+            vals = [(coeff, self.value(ref)) for coeff, ref in terms]
+            if any(isinstance(v, jax.Array) for _, v in vals):
+                with self.counter._x64():
+                    M = jnp.zeros((self.graph.n,) * ndim, jnp.float64)
+                    for coeff, v in vals:
+                        M = M + coeff * jnp.asarray(v, jnp.float64)
+            else:
+                M = np.zeros((self.graph.n,) * ndim)
+                for coeff, v in vals:
+                    M = M + coeff * np.asarray(v, np.float64)
             self._factors[key] = M
         return M
 
-    def _factor_max(self, terms, ndim: int, M: np.ndarray) -> float:
+    def _factor_max(self, terms, ndim: int, M) -> float:
         """max|M| for the factor combined from ``terms``, memoised under
         the same key as ``_combine``: the ``exact_block`` guard needs
         every factor's max magnitude on every kernel execution, and
         re-scanning long-lived serving factors would force a full
-        device→host reduction per query."""
+        device→host reduction per query.  Sharded factors reduce on
+        device (one scalar transfer, no tensor gather)."""
         key = (terms, ndim)
         v = self._factor_maxes.get(key)
         if v is None:
-            v = float(np.abs(np.asarray(M)).max()) if M.size else 0.0
+            if not np.size(M):
+                v = 0.0
+            elif isinstance(M, jax.Array):
+                with self.counter._x64():
+                    v = float(jnp.max(jnp.abs(M)))
+            else:
+                v = float(np.abs(np.asarray(M)).max())
             self._factor_maxes[key] = v
         return v
 
@@ -394,6 +438,17 @@ class CompiledPlan:
                                        (n,) * k))
         return out
 
+    def _shard_fallback(self, reason: str):
+        """Count one sharded-tier fallback, split by phase: a fresh
+        compile's plan evals and a cache-hit serve's re-lower each
+        re-evaluate the same nodes, so one shared counter double-counted
+        the same logical fallback — phase-keyed counters (mirroring the
+        batcher's ``fallbacks_compile``/``fallbacks_execute``) keep the
+        two populations separable in ``obs`` snapshots."""
+        phase = "execute" if self.from_cache else "compile"
+        obs.counter(f"cutjoin.shard_fallbacks_{phase}", reason=reason)
+        self._annotate(shard_fallback=reason)
+
     def _mesh_shards(self) -> int:
         """Usable shard count for this plan's joins: 1 without a mesh
         (or a trivial one); a graph smaller than the mesh falls back to
@@ -406,8 +461,7 @@ class CompiledPlan:
         if d <= 1:
             return 1
         if self.graph.n < d:
-            obs.counter("cutjoin.shard_fallbacks", reason="small-n")
-            self._annotate(shard_fallback="small-n")
+            self._shard_fallback("small-n")
             return 1
         return d
 
@@ -452,8 +506,7 @@ class CompiledPlan:
             return dcj.sharded_dense_join(Ms, node.cut_size,
                                           mesh=self.mesh)
         if shards > 1:
-            obs.counter("cutjoin.shard_fallbacks", reason="wide-cut")
-            self._annotate(shard_fallback="wide-cut")
+            self._shard_fallback("wide-cut")
         self._annotate(route="xla-dense")
         with self.counter._x64():
             return float(_join_reduce(jnp.stack([jnp.asarray(M)
@@ -485,10 +538,10 @@ class CompiledPlan:
         # keep-axis reduce: |cut| in {2, 3}, one surviving axis
         axis = node.keep[0]
         out = None
+        shards = self._mesh_shards()
         if self.cutjoin_kernel:
             from repro.kernels import ops
             block = self._guard_block(node, Ms, axes)
-            shards = self._mesh_shards()
             if block is not None and shards > 1:
                 from repro.distributed import cutjoin as dcj
                 self._annotate(route="kernel-sharded-keep",
@@ -514,12 +567,17 @@ class CompiledPlan:
             else:
                 obs.counter("cutjoin.kernel_fallbacks", cut=node.cut_size,
                             keep=True)
-                if shards > 1:
-                    # no sharded dense keep-axis route: guard refusal
-                    # under a mesh lands on the single-device XLA oracle
-                    obs.counter("cutjoin.shard_fallbacks",
-                                reason="guard-refusal")
-                    self._annotate(shard_fallback="guard-refusal")
+        if out is None and shards > 1:
+            # guard refusal / cutjoin_kernel=False under a mesh: the f64
+            # dense keep join still shards (pure XLA, no chunking, no
+            # guard) — mirroring the scalar route's ``xla-sharded``
+            from repro.distributed import cutjoin as dcj
+            dense = self._dense_expand(Ms, axes, node.cut_size)
+            dense.append(self._mask(node.cut_size))
+            self._annotate(route="xla-sharded-keep", mesh_axes=["data"],
+                           num_shards=shards)
+            out = dcj.sharded_dense_join_keep(dense, node.cut_size,
+                                              keep=axis, mesh=self.mesh)
         if out is None:
             self._annotate(route="xla-keep")
             dense = self._dense_expand(Ms, axes, node.cut_size)

@@ -35,23 +35,90 @@ class CountingEngine:
     """Tensorised counting over one input graph."""
 
     def __init__(self, graph: Graph, budget: int = 1 << 27,
-                 use_x64: bool = True):
+                 use_x64: bool = True, mesh=None):
         self.graph = graph
         self.budget = budget
         self.use_x64 = use_x64
         self._x64 = jax.experimental.enable_x64 if use_x64 else _nullctx
-        with self._x64():
-            dt = jnp.float64 if use_x64 else jnp.float32
-            self.A = jnp.asarray(
-                graph.dense_adjacency(np.float64 if use_x64 else np.float32,
-                                      pad=False))
-            self.labels = (jnp.asarray(graph.label_indicators(
-                np.float64 if use_x64 else np.float32, pad=False))
-                if graph.labels is not None else None)
+        self._np_dtype = np.float64 if use_x64 else np.float32
+        # sharded-contraction binding: a 1-D ("data",) mesh routes hom /
+        # hom_free_tensor through ``distributed.contract`` (row-sharded
+        # adjacency, collective einsums — bit-for-bit with the
+        # single-device path).  None, a trivial mesh, or a graph smaller
+        # than the mesh keeps every contraction single-device.
+        self.mesh = None
+        if mesh is not None:
+            from repro.distributed import meshes as _meshes
+            d = _meshes.num_shards(mesh)
+            if d > 1 and graph.n >= d:
+                self.mesh = mesh
+        # dense adjacency / label indicators build lazily: the sharded
+        # route must never materialise the n x n array (tests assert
+        # ``_A_dense is None`` after sharded counting), and the sharded
+        # buffers are only built when a mesh actually routes to them
+        self._A_dense = None
+        self._labels_dense = None
+        self._A_blocks = None
+        self._label_rows = None
         self.hom_memo: dict = {}
         self.hom_free_memo: dict = {}
         self.domain_memo: dict = {}
         self.stats = {"hom_evals": 0, "hom_hits": 0}
+
+    @property
+    def A(self):
+        """Dense (n, n) adjacency on one device — lazy, so plans whose
+        contractions all run sharded (or clique-enumerated) never pay
+        for or hold it."""
+        if self._A_dense is None:
+            with self._x64():
+                self._A_dense = jnp.asarray(
+                    self.graph.dense_adjacency(self._np_dtype, pad=False))
+        return self._A_dense
+
+    @property
+    def labels(self):
+        """(num_labels, n) one-hot indicators on one device — lazy, as
+        ``A``; None on an unlabelled graph."""
+        if self.graph.labels is None:
+            return None
+        if self._labels_dense is None:
+            with self._x64():
+                self._labels_dense = jnp.asarray(
+                    self.graph.label_indicators(self._np_dtype, pad=False))
+        return self._labels_dense
+
+    # -- sharded-contraction route --------------------------------------------
+    def contract_shards(self) -> int:
+        """Shard count of the contraction route (1 = single-device) —
+        lowering annotates Contract evals with it."""
+        if self.mesh is None:
+            return 1
+        from repro.distributed import meshes as _meshes
+        return _meshes.num_shards(self.mesh)
+
+    def _blocks(self):
+        if self._A_blocks is None:
+            from repro.distributed import contract as C
+            with self._x64():
+                self._A_blocks = C.adjacency_blocks(self.graph, self.mesh,
+                                                    self._np_dtype)
+        return self._A_blocks
+
+    def _unary_blocks(self, p: Pattern):
+        """Sharded analogue of ``_unary_for``: label-indicator rows
+        column-sharded over the mesh, same alphabet-binding semantics."""
+        if p.labels is None or self.graph.labels is None:
+            return None
+        from repro.distributed import contract as C
+        with self._x64():
+            if self._label_rows is None:
+                self._label_rows = C.label_blocks(self.graph, self.mesh,
+                                                  self._np_dtype)
+            L = self._label_rows.shape[0]
+            zero = jnp.zeros_like(self._label_rows[0])
+            return {v: (self._label_rows[l] if 0 <= l < L else zero)
+                    for v, l in enumerate(p.labels)}
 
     # -- memo peeks (costing reads these to zero-cost materialised work) -------
     def has_hom(self, p: Pattern) -> bool:
@@ -94,6 +161,14 @@ class CountingEngine:
             import math
             from repro.core.cliques import clique_count
             val = float(math.factorial(c.n) * clique_count(self.graph, c.n))
+        elif self.mesh is not None:
+            from repro.distributed import contract as C
+            with self._x64():
+                val = float(C.sharded_hom(c, self._blocks(),
+                                          mesh=self.mesh, n=self.graph.n,
+                                          order=order,
+                                          unary=self._unary_blocks(c),
+                                          budget=self.budget))
         else:
             with self._x64():
                 val = float(H.hom_count(c, self.A, order=order,
@@ -108,17 +183,34 @@ class CountingEngine:
         a (N,)*len(free) tensor over graph vertices.  The compiler's
         ``Contract`` primitive for decomposition joins (per-subpattern
         extension counts as a function of the cut tuple).  Memoised by
-        (pattern, free) in caller-canonical form."""
+        (pattern, free) in caller-canonical form.
+
+        Under a mesh the contraction runs sharded (``distributed.
+        contract``) and the result is a jax Array sliced ``P("data",
+        ...)`` over cut axis 0 — exactly the layout the sharded join
+        tier consumes, handed off without a gather; ``np.asarray`` still
+        works for host consumers.  Values are bit-for-bit identical to
+        the single-device route either way."""
         key = (p, tuple(free))
         if key in self.hom_free_memo:
             self.stats["hom_hits"] += 1
             return self.hom_free_memo[key]
         self.stats["hom_evals"] += 1
-        with self._x64():
-            val = np.asarray(H.hom_count(
-                p, self.A, order=tuple(order) if order else None,
-                free=tuple(free), unary=self._unary_for(p),
-                budget=self.budget))
+        if self.mesh is not None:
+            from repro.distributed import contract as C
+            with self._x64():
+                val = C.sharded_hom(p, self._blocks(), mesh=self.mesh,
+                                    n=self.graph.n,
+                                    order=tuple(order) if order else None,
+                                    free=tuple(free),
+                                    unary=self._unary_blocks(p),
+                                    budget=self.budget)
+        else:
+            with self._x64():
+                val = np.asarray(H.hom_count(
+                    p, self.A, order=tuple(order) if order else None,
+                    free=tuple(free), unary=self._unary_for(p),
+                    budget=self.budget))
         self.hom_free_memo[key] = val
         return val
 

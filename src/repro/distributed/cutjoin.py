@@ -370,6 +370,52 @@ def sharded_dense_join(Ms, k: int, *, mesh: Mesh) -> float:
         return float(_dense_scalar_fn(mesh, k)(stack))
 
 
+@functools.lru_cache(maxsize=None)
+def _dense_keep_fn(mesh: Mesh, k: int, keep: int):
+    """shard_map'd dense f64 keep-axis join (the ``xla-sharded-keep``
+    route): the caller's pre-masked (nf, n, ..., n) stack row-sliced on
+    cut axis 0, local Π-then-Σ over the reduced axes; keep == 0 means
+    the kept axis is the sharded one (each shard owns an output slice —
+    concatenate via out_specs), otherwise each shard holds a partial
+    output vector and the shards ``psum``."""
+    def local(stack):
+        red = tuple(a for a in range(k) if a != keep)
+        vec = jnp.sum(jnp.prod(stack, axis=0), axis=red)
+        return vec if keep == 0 else jax.lax.psum(vec, "data")
+
+    in_specs = (P(None, "data", *([None] * (k - 1))),)
+    out_specs = P("data") if keep == 0 else P(None)
+    jfn = jax.jit(shard_map(local, mesh, in_specs=in_specs,
+                            out_specs=out_specs, check_rep=False))
+
+    def call(*args):
+        with meshes.sharding_ctx(mesh):
+            return jfn(*args)
+
+    return call
+
+
+def sharded_dense_join_keep(Ms, k: int, *, keep: int,
+                            mesh: Mesh) -> np.ndarray:
+    """The f64 dense keep-axis join (factors expanded + injectivity
+    mask appended, as ``lowering._eval_local`` builds them) sharded
+    over cut axis 0 — the mesh analogue of the ``_join_keep`` /
+    ``_join_keep3`` XLA oracles, for keep-axis joins whose
+    ``exact_block`` guard refused (previously a wholesale single-device
+    fallback).  Pure XLA, f64 integer sums — bit-for-bit with the
+    single-device oracle by the same argument as
+    ``sharded_dense_join``."""
+    assert 0 <= keep < k
+    d = num_shards(mesh)
+    with _x64():
+        stack = jnp.stack([jnp.asarray(M, jnp.float64) for M in Ms])
+        assert stack.ndim == k + 1
+        n = stack.shape[1 + keep]
+        stack = _pad_axis(stack, 1, _ceil_to(stack.shape[1], d))
+        out = _dense_keep_fn(mesh, k, keep)(stack)
+        return np.asarray(out, np.float64)[:n]
+
+
 # -- layer 1: data-parallel plan execution ------------------------------------------
 
 @functools.lru_cache(maxsize=None)

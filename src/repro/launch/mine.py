@@ -85,10 +85,12 @@ def main(argv=None):
                     help="print the process metrics registry "
                     "(counters/gauges/histograms) after the run")
     ap.add_argument("--mesh", type=int, default=None, metavar="N",
-                    help="shard compiled-plan joins over the first N "
-                    "devices (1-D data mesh; CutJoin/LocalCount routes "
-                    "split their cut grid, results stay bit-for-bit "
-                    "equal to single-device)")
+                    help="shard compiled-plan execution over the first N "
+                    "devices (1-D data mesh): the adjacency lives "
+                    "row-sharded and Contract nodes run as collective "
+                    "einsums, CutJoin/LocalCount routes split their cut "
+                    "grid — results stay bit-for-bit equal to "
+                    "single-device)")
     args = ap.parse_args(argv)
 
     mesh = None

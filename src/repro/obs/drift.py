@@ -5,11 +5,13 @@ selection time (``plan.meta["node_costs"]``); every traced execution
 records each node's measured self time.  This module pairs the two and
 aggregates per (node class × cut size × route) into a calibration
 report.  Routes are free-form span attributes, so the mesh tier's
-``kernel-sharded`` / ``xla-sharded`` / ``kernel-sharded-keep``
-executions group into their own rows automatically — a sharded route
-whose measured/predicted ratio drifts from its single-device sibling
-is the signal that the cost model's per-device collective term
-(``costing._kernel_join_cost(devices=)``) needs recalibration:
+``kernel-sharded`` / ``xla-sharded`` / ``kernel-sharded-keep`` /
+``xla-sharded-keep`` join executions and the sharded-adjacency
+``einsum-sharded`` contractions group into their own rows
+automatically — a sharded route whose measured/predicted ratio drifts
+from its single-device sibling is the signal that the cost model's
+per-device collective term (``costing._kernel_join_cost(devices=)``,
+``costing._contract_cost(devices=)``) needs recalibration:
 
 * **rank correlation** (Spearman) — the quantity DwarvesGraph actually
   relies on: the model only has to *order* candidates correctly, so a

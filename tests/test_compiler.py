@@ -95,6 +95,7 @@ def test_plan_serialization_roundtrip():
 
 # -- cross-pattern CSE ------------------------------------------------------------
 
+@pytest.mark.slow
 def test_cross_pattern_cse_shares_quotients():
     """Joint plan of several patterns is strictly smaller than the sum of
     their individual plans (shared quotient contractions appear once)."""

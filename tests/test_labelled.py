@@ -154,6 +154,7 @@ def test_domain_plan_matches_direct(eng):
             assert np.allclose(dom, ref), (p, rep)
 
 
+@pytest.mark.slow
 def test_domain_plan_cse_across_siblings():
     """Sibling patterns sharing a parent share free-hom contractions:
     the joint domain plan is smaller than the sum of individual ones."""
@@ -233,6 +234,7 @@ def test_domains_cache_interplay():
 
 # -- plan cache eviction -----------------------------------------------------------
 
+@pytest.mark.slow
 def test_plan_cache_disk_lru_eviction(tmp_path):
     """A 3-entry store overflows: stalest entries (by mtime, refreshed
     on read) are evicted, newest survive, and the evictions stat counts

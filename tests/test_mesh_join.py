@@ -101,6 +101,7 @@ def test_sharded_joins_match_single_device():
     assert "OK" in r.stdout, r.stdout + r.stderr
 
 
+@pytest.mark.slow
 def test_mesh_plan_counts_bitforbit():
     """Compiled plans with a mesh bound: counts (unlabelled and
     labelled) and keep-axis local counts bit-for-bit equal to the
@@ -162,7 +163,9 @@ def test_mesh_plan_counts_bitforbit():
 
 def test_small_graph_falls_back_single_device():
     """n < shards: the executor refuses to shard wholesale, counts the
-    ``cutjoin.shard_fallbacks`` reason, and still serves exact counts."""
+    ``cutjoin.shard_fallbacks_compile`` reason (phase-split — serving a
+    cached plan counts ``..._execute`` instead), and still serves exact
+    counts."""
     r = _run("""
         from repro import compiler, obs
         from repro.core.counting import CountingEngine

@@ -341,6 +341,7 @@ def test_batcher_stats_dict_compat():
 
 # -- plan cache eviction metrics ---------------------------------------------------
 
+@pytest.mark.slow
 def test_plancache_eviction_metrics(tmp_path):
     from repro.compiler import PlanCache, plan_key
     reg = obs.REGISTRY

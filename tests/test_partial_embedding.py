@@ -104,6 +104,7 @@ def test_local_tensor_matches_enumeration(gname):
 
 
 @pytest.mark.parametrize("gname", ["er", "tri-lab"])
+@pytest.mark.slow
 def test_anchored_sums_to_global_and_matches_domains(gname):
     """Anchored vectors: Σ_u A_v[u] == inj(p) for every anchor v, and
     A_v equals the engine's inj_free domain entrywise — whichever route
@@ -121,6 +122,7 @@ def test_anchored_sums_to_global_and_matches_domains(gname):
                 (gname, p, v, lc.style)
 
 
+@pytest.mark.slow
 def test_vertex_counts_orbit_invariant():
     """Σ_u vertex_counts[u] == n_p · inj(p) / |Aut|: each edge-induced
     embedding contributes once per pattern position (integer equality
@@ -223,6 +225,7 @@ def test_exact_guard_falls_back_to_xla():
 
 # -- existence fast path -----------------------------------------------------------
 
+@pytest.mark.slow
 def test_exists_matches_engine():
     g = GRAPHS["er"]
     eng = eng_for("er")

@@ -34,6 +34,7 @@ def setup():
     return model, params
 
 
+@pytest.mark.slow
 def test_batcher_matches_sequential(setup):
     model, params = setup
     rng = np.random.default_rng(1)

@@ -1,0 +1,343 @@
+"""Adjacency-sharded contractions (``repro.distributed.contract``).
+
+The tentpole invariant: with the adjacency row-sharded over the
+``("data",)`` mesh, every hom count and free-hom cut tensor is
+bit-for-bit equal to the single-device engine — the collective route
+changes where the einsums run and where the tensors live, never a
+single bit of what they compute — and the dense n x n adjacency never
+materialises anywhere (asserted via the engine's lazy ``_A_dense``
+staying unbuilt and the ``einsum-sharded`` route annotations).
+
+Multi-device checks spawn subprocesses with forced host devices, same
+as ``test_mesh_join``; cache/cost checks are pure host code.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 8):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=SRC)
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, env=env,
+                          timeout=560)
+
+
+_DIFFERENTIAL = """
+    import numpy as np
+    from repro.core.counting import CountingEngine
+    from repro.core.pattern import Pattern, chain, clique, cycle
+    from repro.distributed import meshes
+    from repro.graph import generators as gen
+
+    mesh = meshes.data_mesh()
+    d = meshes.num_shards(mesh)
+
+    for n in (96, 97):                    # 97: not divisible by any d > 1
+        for num_labels in (0, 3):
+            g = gen.erdos_renyi(n, 6.0, seed=3, num_labels=num_labels)
+            ref = CountingEngine(g)
+            sh = CountingEngine(g, mesh=mesh)
+            pats = [cycle(4), chain(4), clique(3), chain(3)]
+            if num_labels:
+                pats += [Pattern(4, cycle(4).edges, labels=(0, 1, 2, 0)),
+                         Pattern(3, ((0, 1), (1, 2)), labels=(2, 0, 1))]
+            for p in pats:
+                for free in ((), (0,), (0, 1)):
+                    free = tuple(v for v in free if v < p.n)
+                    if free:
+                        a = np.asarray(ref.hom_free_tensor(p, free))
+                        b = np.asarray(sh.hom_free_tensor(p, free))
+                        assert np.array_equal(a, b), \\
+                            (n, num_labels, sorted(p.edges), free)
+                    else:
+                        assert ref.hom(p) == sh.hom(p), \\
+                            (n, num_labels, sorted(p.edges))
+            if d > 1:
+                # the sharded engine never built a dense n x n adjacency
+                assert sh._A_dense is None
+                t = sh.hom_free_tensor(cycle(4), (0, 1))
+                if n % d == 0:
+                    # no padding -> the cut tensor stays sliced on axis 0
+                    assert t.sharding.spec[0] == "data", t.sharding.spec
+    print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_contract_matches_single_device_8dev():
+    """The acceptance matrix at 8 devices: labelled/unlabelled,
+    divisible and indivisible n, scalar homs and free tensors."""
+    r = _run(_DIFFERENTIAL, devices=8)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_sharded_contract_matches_single_device_1dev():
+    """Same matrix at 1 device: a 1-device mesh binds to nothing (the
+    engine keeps the single-device route) and everything still agrees."""
+    r = _run(_DIFFERENTIAL, devices=1)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_compiled_plan_contract_route_sharded():
+    """compile(mesh=): Contract nodes take the ``einsum-sharded`` route,
+    counts match the meshless plan bit-for-bit, and the mesh-bound
+    engine never materialises the dense adjacency."""
+    r = _run("""
+        from repro import compiler, obs
+        from repro.core.counting import CountingEngine
+        from repro.core.motifs import motif_patterns
+        from repro.distributed import meshes
+        from repro.graph import generators as gen
+
+        mesh = meshes.data_mesh()
+        g = gen.erdos_renyi(96, 7.0, seed=2)
+        pats = motif_patterns(4)
+        eng = CountingEngine(g, mesh=mesh)
+        tr = obs.Tracer()
+        cp = compiler.compile(pats, g, counter=eng, cache=False, mesh=mesh)
+        cp.tracer = tr
+        base = compiler.compile(pats, g, counter=CountingEngine(g),
+                                cache=False)
+        for p in pats:
+            assert cp.count(p) == base.count(p), sorted(p.edges)
+
+        routes = {}
+        def walk(s):
+            r = s.attrs.get("route")
+            if r:
+                routes[r] = routes.get(r, 0) + 1
+            for c in s.children:
+                walk(c)
+        for root in tr.roots:
+            walk(root)
+        assert "einsum-sharded" in routes, routes
+        assert "einsum" not in routes, routes   # nothing fell back
+        assert eng._A_dense is None
+        print("OK")
+    """)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_sharded_dense_keep_join_matches_oracle():
+    """``sharded_dense_join_keep`` (the guard-refusal keep-axis route)
+    against a plain-numpy oracle: k in {2, 3}, every keep axis,
+    divisible and padding n."""
+    r = _run("""
+        import numpy as np
+        from repro.distributed import cutjoin as dcj, meshes
+
+        mesh = meshes.data_mesh()
+        rng = np.random.default_rng(5)
+        for n in (40, 37):                       # 37: padding path
+            for k in (2, 3):
+                Ms = [rng.integers(0, 5, size=(n,) * k).astype(np.float64)
+                      for _ in range(2)]
+                stack = np.stack(Ms)
+                for keep in range(k):
+                    red = tuple(a + 1 for a in range(k) if a != keep)
+                    ref = np.sum(np.prod(stack, axis=0), axis=tuple(
+                        a for a in range(k) if a != keep))
+                    got = dcj.sharded_dense_join_keep(Ms, k, keep=keep,
+                                                      mesh=mesh)
+                    assert np.array_equal(got, ref), (n, k, keep)
+        print("OK")
+    """)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_keep_axis_guard_refusal_routes_sharded():
+    """Keep-axis joins that can't take the kernel route under a mesh
+    (here: kernel tier disabled outright) land on ``xla-sharded-keep``
+    — not the old wholesale single-device fallback — and the per-vertex
+    counts stay bit-for-bit."""
+    r = _run("""
+        import numpy as np
+        from repro import compiler, obs
+        from repro.api.local import plan_vertex_counts
+        from repro.core.counting import CountingEngine
+        from repro.core.pattern import chain
+        from repro.distributed import meshes
+        from repro.graph import generators as gen
+
+        mesh = meshes.data_mesh()
+        g = gen.erdos_renyi(96, 8.0, seed=2)
+        p = chain(4)
+        tr = obs.Tracer()
+        cp = compiler.compile(p, g, counter=CountingEngine(g, mesh=mesh),
+                              cache=False, mesh=mesh, local=True,
+                              cutjoin_kernel=False)
+        cp.tracer = tr
+        ref = compiler.compile(p, g, counter=CountingEngine(g),
+                               cache=False, local=True,
+                               cutjoin_kernel=False)
+        assert np.array_equal(plan_vertex_counts(cp, p),
+                              plan_vertex_counts(ref, p))
+        routes = set()
+        def walk(s):
+            routes.add(s.attrs.get("route"))
+            for c in s.children:
+                walk(c)
+        for root in tr.roots:
+            walk(root)
+        assert "xla-sharded-keep" in routes, routes
+        assert "xla-keep" not in routes, routes
+        # the new route is not a fallback — no shard_fallbacks counted
+        snap = obs.snapshot()
+        assert not any("shard_fallbacks" in k for k in snap), snap
+        print("OK")
+    """)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_shard_fallback_counters_split_by_phase():
+    """One fallback per phase: a fresh compile that serves a count
+    increments ``..._compile`` only; re-serving the cached plan
+    increments ``..._execute`` only — no double counting."""
+    r = _run("""
+        from repro import compiler, obs
+        from repro.compiler import PlanCache
+        from repro.core.counting import CountingEngine
+        from repro.core.pattern import cycle
+        from repro.distributed import meshes
+        from repro.graph import generators as gen
+
+        mesh = meshes.data_mesh()
+        g = gen.erdos_renyi(6, 2.0, seed=1)       # n=6 < 8 -> small-n
+        p = cycle(4)
+        cache = PlanCache()
+        c1 = compiler.compile(p, g, cache=cache, mesh=mesh).count(p)
+        snap = obs.snapshot()
+        compile_hits = snap.get("cutjoin.shard_fallbacks_compile", {})
+        assert sum(compile_hits.values()) == 1, snap
+        assert "cutjoin.shard_fallbacks_execute" not in snap, snap
+
+        cp2 = compiler.compile(p, g, cache=cache, mesh=mesh)
+        assert cp2.from_cache
+        assert cp2.count(p) == c1
+        snap = obs.snapshot()
+        assert sum(snap["cutjoin.shard_fallbacks_compile"].values()) == 1
+        assert sum(snap["cutjoin.shard_fallbacks_execute"].values()) == 1
+        print("OK")
+    """)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_plan_cache_mesh_device_compat():
+    """A plan compiled with a mesh must not be served to a meshless
+    caller, nor a meshless plan to a mesh-bound caller; same-mesh hits
+    still serve."""
+    r = _run("""
+        from repro import compiler
+        from repro.compiler import PlanCache
+        from repro.core.pattern import cycle
+        from repro.distributed import meshes
+        from repro.graph import generators as gen
+
+        mesh = meshes.data_mesh()
+        g = gen.erdos_renyi(64, 6.0, seed=1)
+        p = cycle(4)
+        cache = PlanCache()
+        a = compiler.compile(p, g, cache=cache, mesh=mesh)
+        assert not a.from_cache
+        assert a.plan.meta["mesh_devices"] == 8
+
+        b = compiler.compile(p, g, cache=cache)          # meshless
+        assert not b.from_cache                          # recompiled
+        assert b.plan.meta["mesh_devices"] == 1
+
+        c = compiler.compile(p, g, cache=cache, mesh=mesh)
+        assert not c.from_cache                          # overwrite was meshless
+
+        d2 = compiler.compile(p, g, cache=cache, mesh=mesh)
+        assert d2.from_cache                             # same config serves
+        assert a.count(p) == b.count(p) == d2.count(p)
+        print("OK")
+    """)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_config_compatible_unit():
+    """The compat predicate itself, including legacy entries that
+    predate the ``mesh_devices`` field (valid for meshless callers
+    only)."""
+    from repro.compiler import config_compatible
+    from repro.compiler.ir import Plan
+
+    plan = Plan()
+    plan.meta.update({"budget": 1 << 27, "max_cutjoin_cut": 3,
+                      "mesh_devices": 8})
+    ok = dict(budget=1 << 27, max_cutjoin_cut=3)
+    assert config_compatible(plan, **ok, mesh_devices=8)
+    assert not config_compatible(plan, **ok, mesh_devices=1)
+    assert not config_compatible(plan, **ok, mesh_devices=4)
+    assert not config_compatible(plan, budget=1, max_cutjoin_cut=3,
+                                 mesh_devices=8)
+
+    legacy = Plan()                       # written before the field existed
+    legacy.meta.update({"budget": 1 << 27, "max_cutjoin_cut": 3})
+    assert config_compatible(legacy, **ok, mesh_devices=1)
+    assert not config_compatible(legacy, **ok, mesh_devices=8)
+
+
+def test_contract_cost_devices_term():
+    """More devices: per-device contraction work shrinks, a log2(d)
+    per-step collective surcharge appears — never free, and a 1-device
+    mesh prices identically to no mesh."""
+    import math
+
+    from repro.compiler.costing import _contract_cost
+    from repro.compiler.ir import Contract
+    from repro.core import homomorphism as H
+    from repro.core.apct import APCT
+    from repro.core.pattern import cycle
+    from repro.graph import generators as gen
+
+    g = gen.erdos_renyi(512, 6.0, seed=1)
+    apct = APCT(g)
+    p = cycle(4)
+    node = Contract(key="c", pattern=p, order=H.greedy_plan(p, ()))
+    budget = 1 << 27
+    c1 = _contract_cost(node, apct, g.n, budget)
+    assert c1 == _contract_cost(node, apct, g.n, budget, devices=1)
+    c8 = _contract_cost(node, apct, g.n, budget, devices=8)
+    assert c8 < c1                       # sharding pays off at n=512
+    # the collective term is never waived: with tiny per-device work the
+    # log2(d) surcharge dominates
+    tiny = gen.erdos_renyi(8, 2.0, seed=2)
+    t8 = _contract_cost(node, APCT(tiny), tiny.n, budget, devices=8)
+    assert t8 > math.log2(8)
+
+
+def test_shard_check_covers_contract_nodes():
+    """``shard-budget-overflow`` now reports Contract nodes whose
+    per-shard residency (row block + widest replicated intermediate)
+    exceeds the cap."""
+    from repro import analysis, compiler
+    from repro.analysis import GraphInfo
+    from repro.core.counting import CountingEngine
+    from repro.core.pattern import cycle
+    from repro.graph import generators as gen
+
+    g = gen.erdos_renyi(24, 4.0, seed=13)
+    cp = compiler.compile(cycle(4), g, counter=CountingEngine(g),
+                          cache=False)
+    info = GraphInfo.from_graph(g)
+    res = analysis.shard_check(cp.plan, info, 4, budget=1)
+    contract_keys = {k for k, n in cp.plan.nodes.items()
+                     if type(n).__name__ == "Contract"}
+    assert contract_keys, "plan has no Contract nodes?"
+    flagged = {d.node for d in res.warnings
+               if d.code == "shard-budget-overflow"}
+    assert contract_keys & flagged, (contract_keys, flagged)
+    # a sane budget flags nothing on this tiny plan
+    res2 = analysis.shard_check(cp.plan, info, 4, budget=1 << 27)
+    assert not [d for d in res2.warnings
+                if d.code == "shard-budget-overflow"]
