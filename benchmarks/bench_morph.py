@@ -1,0 +1,123 @@
+"""Pattern-morphing count algebra: motif families served off the store.
+
+Workload (the morphing steady state): warm a ``CountStore`` with <= 3
+compiled 5-vertex plans, then serve the whole size-4 connected-motif
+family (6 members) through ``compiler.compile(..., morph=)``:
+
+* members whose inclusion–exclusion identity closes over held counts
+  take the compile fast path — no candidate search, no contraction,
+  every hom read answered from the store (route ``morph-derive``,
+  counter ``morph.hits``) — and their derived counts are asserted
+  integer-equal to fresh direct compiles;
+* members that don't close fall back to search (``morph.missing_compiles``)
+  with held homs priced ~0.
+
+Headline numbers (also in the JSON extras): ``fraction`` = share of the
+family served algebraically with zero per-member compiles (acceptance
+bar: >= 0.5), and ``speedup`` = compiling + executing every member
+directly vs serving the family off the warm store.  A size-5 coverage
+row reports how much of the 21-member family the same store already
+determines (derivation only, no compiles).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_morph [--smoke]
+Rows land in ``benchmarks/results/BENCH_morph.json`` for the trend
+renderer (``fraction``/``speedup`` fold in as pseudo-rows).
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit, save_json, timeit
+from repro import compiler, obs
+from repro.compiler import morph as morphlib
+from repro.compiler.cache import graph_signature
+from repro.core.pattern import Pattern, chain
+from repro.graph import generators as gen
+
+
+def _warm_patterns():
+    """Three 5-vertex patterns whose compiled plans' scalar homs and
+    shrinkage injs close 5 of the 6 size-4 motifs: the 5-path (claw,
+    tailed triangle, P3, K2), the gem (diamond, K4) and the tailed
+    4-cycle (C4).  Only the 4-path stays missing — no 5-vertex
+    decomposition materialises its hom."""
+    gem = Pattern(5, [(0, 1), (1, 2), (2, 3), (0, 4), (1, 4), (2, 4),
+                      (3, 4)])
+    tailed_c4 = Pattern(5, [(0, 1), (1, 2), (2, 3), (0, 3), (3, 4)])
+    return (chain(5), gem, tailed_c4)
+
+
+def bench_family(n: int, seed: int = 3):
+    g = gen.erdos_renyi(n, 6.0, seed=seed)
+    gsig = graph_signature(g)
+    store = morphlib.CountStore()
+    warm = _warm_patterns()
+
+    def do_warm():
+        for p in warm:
+            compiler.compile((p,), g, cache=False, morph=store).count(p)
+
+    dt_warm, _ = timeit(do_warm)
+    emit(f"morph/warm/n={n}", dt_warm / len(warm) * 1e6,
+         f"plans={len(warm)}")
+
+    family = morphlib.motif_family(4)
+    hits0 = int(obs.get("morph.hits", 0.0))
+
+    def serve():
+        out = {}
+        for p in family:
+            cp = compiler.compile((p,), g, cache=False, morph=store)
+            out[p] = (cp.count(p), bool(cp.plan.meta.get("morph")))
+        return out
+
+    dt_serve, served_counts = timeit(serve)
+    served = int(obs.get("morph.hits", 0.0)) - hits0
+    assert served == sum(1 for _, m in served_counts.values() if m)
+    emit(f"morph/serve-family/k=4/n={n}", dt_serve / len(family) * 1e6,
+         f"served={served}/{len(family)}")
+
+    # ground truth: compile + execute every member directly, morph off
+    def direct_all():
+        return {p: compiler.compile((p,), g, cache=False).count(p)
+                for p in family}
+
+    dt_direct, truth = timeit(direct_all)
+    emit(f"morph/compile-every-member/k=4/n={n}",
+         dt_direct / len(family) * 1e6)
+
+    for p, (v, _) in served_counts.items():
+        assert int(round(v)) == int(round(truth[p])), \
+            (sorted(p.edges), v, truth[p])
+
+    # size-5 coverage off the same store: derivation only, no compiles
+    fam5 = morphlib.motif_family(5)
+    served5 = sum(1 for p in fam5
+                  if morphlib.derive(p, store, gsig).complete)
+    emit(f"morph/derive-family/k=5/n={n}", 0.0,
+         f"served={served5}/{len(fam5)}")
+
+    fraction = served / len(family)
+    speedup = dt_direct / max(dt_warm + dt_serve, 1e-12)
+    return {"family_size": len(family), "served_algebraically": served,
+            "fraction": fraction, "speedup": speedup,
+            "family5_size": len(fam5), "served5": served5}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration")
+    args = ap.parse_args(argv)
+
+    extra = bench_family(96 if args.smoke else 256)
+    path = save_json("morph", extra=extra)
+    if extra["fraction"] < 0.5:
+        print(f"WARNING: {extra['served_algebraically']}/"
+              f"{extra['family_size']} of the size-4 family served "
+              f"algebraically — below the 1/2 acceptance bar", flush=True)
+    return path
+
+
+if __name__ == "__main__":
+    main()

@@ -49,6 +49,31 @@ def load_snapshots(root: pathlib.Path):
                 # name survives a markdown table cell
                 rows["drift-spread " + key.replace("|", "/")] = \
                     float(g["ratio_spread"])
+        # ratio-style derived annotations — "scaling=4.4x" /
+        # "vs_single=0.09x" (bench_mesh), "speedup=6279x"
+        # (bench_compiler) — become their own trend rows, so a
+        # sharded-speedup regression reads off the table exactly like a
+        # latency regression.  Only "<key>=<number>x" folds: plain
+        # counts ("q=5", "plans=3") and display-only fractions
+        # ("served=5/6") stay in the derived column of their suite.
+        for r in d.get("rows") or []:
+            for part in (r.get("derived") or "").split(","):
+                k, _, v = part.partition("=")
+                v = v.strip()
+                if not v.endswith("x"):
+                    continue
+                try:
+                    val = float(v[:-1])
+                except ValueError:
+                    continue
+                rows[f"{k.strip()} {r['name']}"] = val
+        # bench_morph's headline extras live top-level: the fraction of
+        # the motif family served algebraically (higher is better —
+        # read the delta sign accordingly) and end-to-end speedup vs
+        # compiling every member
+        for k in ("fraction", "speedup"):
+            if isinstance(d.get(k), (int, float)):
+                rows[f"{suite}-{k}"] = float(d[k])
         label = f.parent.name if f.parent != root else "results"
         suites.setdefault(suite, []).append((label, rows))
     return suites

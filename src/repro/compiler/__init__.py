@@ -44,12 +44,15 @@ from repro.core.pattern import Pattern
 from repro.graph.storage import Graph
 from repro.compiler import cache as _cache_mod
 from repro.compiler import costing, frontend
+from repro.compiler import morph as _morph
 from repro.compiler.cache import PlanCache, config_compatible, plan_key
 from repro.compiler.ir import Plan, local_key, pattern_key
 from repro.compiler.lowering import CompiledPlan, lower
+from repro.compiler.morph import CountStore, default_store
 
-__all__ = ["compile", "Plan", "PlanCache", "CompiledPlan", "pattern_key",
-           "plan_key", "local_key", "default_cache", "config_compatible"]
+__all__ = ["compile", "Plan", "PlanCache", "CompiledPlan", "CountStore",
+           "pattern_key", "plan_key", "local_key", "default_cache",
+           "default_store", "config_compatible"]
 
 _DEFAULT_CACHE = PlanCache()
 
@@ -152,7 +155,8 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
             budget: int = 1 << 27, max_cutjoin_cut: int = 3,
             use_pallas: bool = False, cutjoin_kernel: bool = True,
             domains: bool = False, local: bool = False,
-            verify: bool = True, mesh=None) -> CompiledPlan:
+            verify: bool = True, mesh=None,
+            morph=False) -> CompiledPlan:
     """Compile a pattern (or application pattern set) for one graph.
 
     Cache hit: deserialise the stored plan and lower it (no search).
@@ -212,6 +216,25 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
     compiled against a mesh carries sharded route annotations and
     per-device cost estimates a meshless executor can't honour (and
     vice versa), so mismatched lookups recompile instead of serving it.
+
+    ``morph`` turns the pattern-morphing count algebra on
+    (``compiler.morph``): ``True`` uses the process-wide
+    ``default_store()``, or pass a ``CountStore``.  Before searching,
+    every query pattern is expanded over the store's held counts
+    (inclusion–exclusion over the pattern lattice); when the whole
+    query set closes algebraically the compiler skips candidate search
+    entirely and serves a direct-shaped plan whose hom reads come back
+    from the store (``plan.meta["morph"]``, route ``morph-derive``,
+    ``obs`` counter ``morph.hits``) — zero contractions.  Partially
+    closed queries still search, but held homs price at ~0
+    (``costing.select_candidates(held=)``) and are served from the
+    store at execution; fully-missing ones count
+    ``morph.missing_compiles``.  Every count read of the returned plan
+    harvests its exact scalars back into the store.  Morph-compiled
+    plans are never written to the plan *cache* (their selection is
+    store-biased; a later ``morph=False`` compile must behave exactly
+    as if morphing never existed), and ``morph=False`` (the default)
+    changes nothing anywhere.
     """
     if isinstance(patterns, Pattern):
         patterns = (patterns,)
@@ -224,6 +247,10 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
     use_cache = cache is not False
     if cache is None:
         cache = _DEFAULT_CACHE
+    morph_store = None
+    if morph is not False and morph is not None:
+        morph_store = (morph if isinstance(morph, _morph.CountStore)
+                       else _morph.default_store())
     from repro.distributed import meshes as _meshes
     mesh_devices = _meshes.num_shards(mesh)
     key = plan_key(patterns, graph)
@@ -244,7 +271,7 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
                 return lower(plan, graph, counter=counter,
                              use_pallas=use_pallas, from_cache=True,
                              budget=budget, cutjoin_kernel=cutjoin_kernel,
-                             mesh=mesh)
+                             mesh=mesh, count_store=morph_store)
             # config matches but the stored plan lacks a requested
             # flavor: recompile with the UNION of requested and stored
             # flags, so the overwrite supersets the entry instead of
@@ -252,6 +279,47 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
             # alternating request kinds
             domains = domains or bool(plan.meta.get("domains"))
             local = local or bool(plan.meta.get("local"))
+
+    held = None
+    if morph_store is not None:
+        from repro import obs as _obs
+        gsig = _cache_mod.graph_signature(graph)
+        derived = [_morph.derive(p, morph_store, gsig) for p in patterns]
+        if all(d.complete for d in derived) and not domains and not local:
+            # the whole query set closes algebraically over held counts:
+            # skip candidate search entirely and serve the direct-shaped
+            # plan — lowering answers every hom node from the store
+            # (route "morph-derive"), so no contraction ever runs
+            for _ in patterns:
+                _obs.counter("morph.hits")
+            plan = frontend.assemble(
+                [(p, frontend.direct_candidate(p)) for p in patterns])
+            plan.meta.update({
+                "key": key, "budget": budget,
+                "max_cutjoin_cut": max_cutjoin_cut,
+                "mesh_devices": mesh_devices,
+                "domains": False, "local": False,
+                "estimated_cost": 0.0, "morph": True,
+                "styles": {pattern_key(p): "morph" for p in patterns},
+                "cuts": {pattern_key(p): None for p in patterns},
+            })
+            if verify:
+                from repro import analysis
+                ginfo = analysis.GraphInfo.from_graph(graph)
+                plan.meta["graph_info"] = ginfo.to_dict()
+                analysis.verify(plan, graph_info=ginfo,
+                                budget=budget).raise_if_failed()
+            return lower(plan, graph, counter=counter,
+                         use_pallas=use_pallas, from_cache=False,
+                         budget=budget, cutjoin_kernel=cutjoin_kernel,
+                         mesh=mesh, count_store=morph_store)
+        for d in derived:
+            if d.missing:
+                _obs.counter("morph.missing_compiles")
+        # partial closure (or a domains/local request): fall through to
+        # the search, but hand costing the held hom pool — held
+        # contractions price at ~0 and execute from the store
+        held = morph_store.held_hom_keys(gsig)
 
     if apct is None:
         from repro.core.apct import APCT
@@ -264,7 +332,7 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
     selections, total_cost = costing.select_candidates(
         per_pattern, apct, graph.n, budget, counter=counter,
         label_fracs=label_fracs, node_costs=node_costs,
-        devices=mesh_devices)
+        devices=mesh_devices, held=held)
     plan = frontend.assemble(selections)
     if domains:
         for p in patterns:
@@ -307,8 +375,11 @@ def compile(patterns: Union[Pattern, Iterable[Pattern]], graph: Graph, *,
         for diag in result.warnings:
             if diag.code == "always-refused":
                 obs.counter("analysis.always_refused")
-    if use_cache:
+    if use_cache and morph_store is None:
+        # morph-biased selections never enter the shared plan cache: a
+        # later morph=False compile must see PR-9-identical behaviour
         cache.put(key, plan)
     return lower(plan, graph, counter=counter, use_pallas=use_pallas,
                  from_cache=False, budget=budget,
-                 cutjoin_kernel=cutjoin_kernel, mesh=mesh)
+                 cutjoin_kernel=cutjoin_kernel, mesh=mesh,
+                 count_store=morph_store)

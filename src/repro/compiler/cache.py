@@ -8,6 +8,14 @@ an optional on-disk directory of canonical-JSON plan files, so warmed
 plans survive across processes (and can be shipped with a deployment).
 The disk tier can be size-capped (``max_disk_entries``) with
 LRU-by-mtime eviction for long-lived serving hosts.
+
+Format note: plan files are stamped with ``ir.PLAN_FORMAT_VERSION`` and
+drift is a clean miss (recompile + overwrite).  The morphing count
+store (``compiler.morph.CountStore``) keeps its own per-graph files
+(``counts-<graph signature>.json``) under the same discipline — atomic
+tmp-write + ``os.replace``, ``morph.MORPH_FORMAT_VERSION``-stamped,
+version drift a clean miss — so a deployment can ship both tiers
+side by side and roll either format independently.
 """
 from __future__ import annotations
 
@@ -25,8 +33,11 @@ from repro.compiler.ir import Plan, pattern_key
 
 def graph_signature(g: Graph) -> str:
     """Content hash of the graph (vertices, canonical edge list, labels).
-    Memoised on the instance — edges are immutable after construction —
-    so serving loops don't re-hash O(E) bytes per query."""
+    Memoised on the instance so serving loops don't re-hash O(E) bytes
+    per query.  Both the plan cache and the morph ``CountStore`` key
+    exact results by this signature, so any caller that mutates a graph
+    in place must call ``Graph.invalidate_signature()`` afterwards — a
+    stale memo would serve the pre-mutation graph's plans and counts."""
     sig = getattr(g, "_plan_signature", None)
     if sig is None:
         h = hashlib.sha256()
@@ -160,7 +171,9 @@ class PlanCache:
         try:
             os.utime(f)                    # mark recently used
         except OSError:
-            pass
+            # read-only cache dir (the shipped-with-deployment case):
+            # the read still serves, recency just can't refresh
+            obs.counter("plancache.utime_failures")
         self._mem[key] = plan
         return plan
 
@@ -215,7 +228,7 @@ class PlanCache:
                 # stalest to the LRU and get evicted first
                 os.utime(self._file(key))
             except OSError:
-                pass
+                obs.counter("plancache.utime_failures")
         if plan is None and self.path:
             plan = self._load_disk(key)
         if plan is None:

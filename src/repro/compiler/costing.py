@@ -185,13 +185,21 @@ def _kernel_join_cost(cut_size: int, factor_axes, n_vertices: int,
 
 
 def node_cost(node, apct, n_vertices: int, budget: int = 1 << 27,
-              counter=None, label_fracs=None, devices: int = 1) -> float:
+              counter=None, label_fracs=None, devices: int = 1,
+              held=None) -> float:
     if isinstance(node, Contract):
         if _materialised(node, counter):
+            return 0.0
+        # the morph count store already holds this scalar hom: lowering
+        # serves it without contracting (route "morph-derive"), so the
+        # model prices it like a materialised engine memo
+        if held and not node.free and node.key in held:
             return 0.0
         return _contract_cost(node, apct, n_vertices, budget, label_fracs,
                               devices)
     if isinstance(node, Intersect):
+        if held and node.key in held:
+            return 0.0
         # ordered enumeration: linear scan + one unit per (approximate)
         # clique tuple
         return apct.query(clique(node.k)) + n_vertices
@@ -241,14 +249,14 @@ def node_cost(node, apct, n_vertices: int, budget: int = 1 << 27,
 def candidate_cost(cand: Candidate, apct, n_vertices: int,
                    shared: Dict[str, float], budget: int = 1 << 27,
                    counter=None, label_fracs=None,
-                   devices: int = 1) -> float:
+                   devices: int = 1, held=None) -> float:
     """Cost of one candidate given already-scheduled nodes (cost 0)."""
     total = 0.0
     for node in cand.nodes:
         if node.key in shared:
             continue
         total += node_cost(node, apct, n_vertices, budget, counter,
-                           label_fracs, devices)
+                           label_fracs, devices, held)
         if total == math.inf:
             return math.inf
     return total
@@ -256,18 +264,19 @@ def candidate_cost(cand: Candidate, apct, n_vertices: int,
 
 def commit(cand: Candidate, apct, n_vertices: int,
            shared: Dict[str, float], budget: int = 1 << 27, counter=None,
-           label_fracs=None, devices: int = 1):
+           label_fracs=None, devices: int = 1, held=None):
     for node in cand.nodes:
         if node.key not in shared:
             shared[node.key] = node_cost(node, apct, n_vertices, budget,
-                                         counter, label_fracs, devices)
+                                         counter, label_fracs, devices,
+                                         held)
 
 
 def select_candidates(per_pattern: List[Tuple[Pattern, List[Candidate]]],
                       apct, n_vertices: int,
                       budget: int = 1 << 27, counter=None,
                       label_fracs=None, node_costs: Dict[str, float] = None,
-                      devices: int = 1):
+                      devices: int = 1, held=None):
     """Greedy joint selection over the application: for each pattern pick
     the cheapest candidate under the current shared pool, then commit its
     nodes.  Returns ([(pattern, winner)], total_cost).
@@ -280,7 +289,11 @@ def select_candidates(per_pattern: List[Tuple[Pattern, List[Candidate]]],
     on the plan so traced executions can pair each node's prediction
     with its measured time.  ``devices`` is the execution mesh's shard
     count (1 without a mesh): joins price per-device plus a collective
-    term (``_kernel_join_cost``), so selection sees the mesh."""
+    term (``_kernel_join_cost``), so selection sees the mesh.  ``held``
+    (set of ``hom:`` node keys the morph count store already holds for
+    this graph) prices those contractions at 0 — the morph-candidate
+    costing hook: a direct plan whose homs the store holds beats a
+    decomposition exactly when the algebra makes it free."""
     shared: Dict[str, float] = {}
     out = []
     total = 0.0
@@ -288,7 +301,7 @@ def select_candidates(per_pattern: List[Tuple[Pattern, List[Candidate]]],
         best, bc = None, math.inf
         for cand in cands:
             c = candidate_cost(cand, apct, n_vertices, shared, budget,
-                               counter, label_fracs, devices)
+                               counter, label_fracs, devices, held)
             if c < bc:
                 best, bc = cand, c
         if best is None:
@@ -300,7 +313,7 @@ def select_candidates(per_pattern: List[Tuple[Pattern, List[Candidate]]],
             total = math.inf
             continue
         commit(best, apct, n_vertices, shared, budget, counter,
-               label_fracs, devices)
+               label_fracs, devices, held)
         out.append((p, best))
         total += bc
     if node_costs is not None:

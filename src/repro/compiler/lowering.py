@@ -90,7 +90,7 @@ class CompiledPlan:
                  counter: Optional[CountingEngine] = None,
                  use_pallas: bool = False, from_cache: bool = False,
                  budget: int = 1 << 27, cutjoin_kernel: bool = True,
-                 mesh=None):
+                 mesh=None, count_store=None):
         self.plan = plan
         self.graph = graph
         # a default engine inherits the mesh so Contract nodes run their
@@ -107,6 +107,11 @@ class CompiledPlan:
         # einsums over the row-sharded adjacency (distributed/contract);
         # None keeps every route single-device
         self.mesh = mesh
+        # morph count store (compiler.morph.CountStore): scalar hom
+        # reads consult it before contracting (route "morph-derive")
+        # and every count read harvests its exact scalars back into it
+        self.count_store = count_store
+        self._gsig: Optional[str] = None
         self._values: Dict[str, object] = {}
         self._masks: Dict[int, np.ndarray] = {}
         self._factors: Dict[tuple, np.ndarray] = {}
@@ -137,21 +142,40 @@ class CompiledPlan:
         if tr is not None:
             tr.annotate(**attrs)
 
+    # -- morph store hooks -------------------------------------------------------
+    def _store_hom(self, node_key: str):
+        """Held scalar hom for one ``hom:`` node key, or None (no store
+        attached / miss).  The graph signature is resolved lazily once."""
+        if self.count_store is None:
+            return None
+        if self._gsig is None:
+            from repro.compiler.cache import graph_signature
+            self._gsig = graph_signature(self.graph)
+        return self.count_store.get_key(self._gsig, node_key)
+
+    def _harvest(self):
+        if self.count_store is not None:
+            self.count_store.harvest(self)
+
     # -- public API --------------------------------------------------------------
     def count(self, p: Pattern) -> float:
         """Edge-induced embedding count of one compiled pattern."""
         key = self.plan.output_for(p)
         with self._root("count", key):
-            return float(self.value(key))
+            val = float(self.value(key))
+        self._harvest()
+        return val
 
     def counts(self) -> dict:
         """All compiled count outputs: canonical pattern key -> count
         (partial-embedding outputs are tensors — read them through
         ``local_counts``)."""
         with self._root("counts", "*"):
-            return {pk: float(self.value(nk))
-                    for pk, nk in self.plan.outputs.items()
-                    if not is_local_output(pk)}
+            out = {pk: float(self.value(nk))
+                   for pk, nk in self.plan.outputs.items()
+                   if not is_local_output(pk)}
+        self._harvest()
+        return out
 
     def has_local(self, p: Pattern, anchor: Optional[int] = None) -> bool:
         """True when the plan carries the requested partial-embedding
@@ -267,6 +291,11 @@ class CompiledPlan:
 
     def _eval(self, node):
         if isinstance(node, Contract):
+            if not node.free:
+                held = self._store_hom(node.key)
+                if held is not None:
+                    self._annotate(route="morph-derive")
+                    return float(held)
             shards = self.counter.contract_shards()
             if node.free:
                 # decode the marker-encoded pattern: strips cut-rank
@@ -288,6 +317,10 @@ class CompiledPlan:
                 self._annotate(route="einsum")
             return self.counter.hom(node.pattern, order=node.order or None)
         if isinstance(node, Intersect):
+            held = self._store_hom(node.key)
+            if held is not None:
+                self._annotate(route="morph-derive")
+                return float(held)
             if self.use_pallas and node.k == 3:
                 from repro.kernels import ops
                 self._annotate(route="pallas-triangle")
@@ -627,14 +660,16 @@ class CompiledPlan:
 def lower(plan: Plan, graph: Graph, *, counter=None, use_pallas=False,
           from_cache=False, budget: int = 1 << 27,
           cutjoin_kernel: bool = True, verify: bool = False,
-          mesh=None) -> CompiledPlan:
+          mesh=None, count_store=None) -> CompiledPlan:
     """Bind a plan to a graph.  ``verify=True`` runs the static
     verifier against this graph first and raises ``PlanVerifyError``
     instead of binding a malformed plan — for plans that arrived from
     outside ``compiler.compile`` (hand-built, deserialized, mutated),
     which already verifies what it commits.  ``mesh`` (a 1-D
     ``("data",)`` jax Mesh) routes guarded joins through the sharded
-    tier — numerically identical, see ``distributed/cutjoin.py``."""
+    tier — numerically identical, see ``distributed/cutjoin.py``.
+    ``count_store`` (a ``compiler.morph.CountStore``) serves held scalar
+    homs without contracting and harvests every count read back."""
     if verify:
         from repro import analysis
         analysis.verify(
@@ -642,4 +677,5 @@ def lower(plan: Plan, graph: Graph, *, counter=None, use_pallas=False,
             budget=budget).raise_if_failed()
     return CompiledPlan(plan, graph, counter=counter, use_pallas=use_pallas,
                         from_cache=from_cache, budget=budget,
-                        cutjoin_kernel=cutjoin_kernel, mesh=mesh)
+                        cutjoin_kernel=cutjoin_kernel, mesh=mesh,
+                        count_store=count_store)

@@ -34,6 +34,19 @@ class Graph:
         self._csr = None
         self._dense = None
 
+    def invalidate_signature(self):
+        """Drop every content-derived memo after an in-place mutation of
+        ``edges``/``labels``: the ``_plan_signature`` content hash set by
+        ``repro.compiler.cache.graph_signature`` (the plan cache and the
+        morph ``CountStore`` key exact results by it — a stale one would
+        serve the pre-mutation graph's plans and counts) plus the CSR
+        and dense-adjacency caches.  The evolving-graph path must call
+        this on every applied delta."""
+        if hasattr(self, "_plan_signature"):
+            del self._plan_signature
+        self._csr = None
+        self._dense = None
+
     # -- CSR ---------------------------------------------------------------
     @property
     def csr(self):

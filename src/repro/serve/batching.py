@@ -179,13 +179,18 @@ class PatternQueryBatcher:
     """
 
     def __init__(self, graph, *, cache=None, apct=None, max_batch: int = 8,
-                 verify_plans: bool = True, mesh=None):
+                 verify_plans: bool = True, mesh=None, morph=False):
         from repro.compiler import PlanCache
         from repro.core.counting import CountingEngine
         self.graph = graph
         self.cache = cache if cache is not None else PlanCache()
         self.apct = apct
         self.max_batch = max_batch
+        # morphing count algebra (compiler.morph): False off, True the
+        # process store, or a CountStore instance — every compile this
+        # batcher issues feeds and reads it, so clustered query traffic
+        # (motif families) serves algebraically after a few warm plans
+        self.morph = morph
         # layer-1 mesh execution: plans compile against the mesh (their
         # CutJoin/LocalCount routes shard over it) and each step's
         # requests fan out round-robin over the mesh's device slots —
@@ -240,7 +245,8 @@ class PatternQueryBatcher:
             cp = compiler.compile(patterns, self.graph, apct=self.apct,
                                   counter=self.counter, cache=self.cache,
                                   domains=domains, local=local,
-                                  verify=self.verify_plans, mesh=self.mesh)
+                                  verify=self.verify_plans, mesh=self.mesh,
+                                  morph=self.morph)
         except Exception:
             return None
         self.stats["cache_hits" if cp.from_cache else "compiles"] += 1
